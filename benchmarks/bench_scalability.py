@@ -1,0 +1,73 @@
+"""Paper §3 'Scalability and storage requirements': per-agent traffic per
+round is ~constant in |A| and bounded by ~2|M|; gossip traffic grows with
+fanout; per-agent storage is k_i/K of the model."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_row, load_data, save_json
+from repro.data import iid_split
+from repro.fl import IPLSSimulation, SimConfig, run_gossip
+from repro.models import mlp_mnist
+from repro.core.partition import flatten_params
+
+
+def run(rounds: int = 3, agent_counts=(5, 10, 20, 40), out_json: str | None = None) -> List[str]:
+    x_tr, y_tr, x_te, y_te = load_data(num_train=12000)
+    w0, _ = flatten_params(mlp_mnist.init_params(0))
+    M_bytes = w0.size * 4
+    rows: List[str] = []
+    results = {"model_bytes": int(M_bytes)}
+
+    for n in agent_counts:
+        shards = iid_split(x_tr, y_tr, n, seed=0)
+        t0 = time.time()
+        cfg = SimConfig(
+            num_agents=n, num_partitions=10, pi=2, rho=2, rounds=rounds,
+            local_iters=2, eval_agents=2,
+        )
+        sim = IPLSSimulation(cfg, shards, x_te, y_te)
+        sim.run()
+        per_agent_round = sim.net.pubsub.total_bytes() / n / rounds
+        # storage: bytes of owned partitions per agent
+        store = [
+            sum(st.value.nbytes for st in ag.owned.values()) for ag in sim.agents.values()
+        ]
+        results[f"ipls_n{n}"] = {
+            "per_agent_bytes_per_round": per_agent_round,
+            "ratio_to_2M": per_agent_round / (2 * M_bytes),
+            "mean_storage_fraction": float(np.mean(store) / M_bytes),
+        }
+        rows.append(
+            csv_row(
+                f"scalability_ipls_n{n}",
+                (time.time() - t0) / rounds * 1e6,
+                f"per_agent_MBpr={per_agent_round/1e6:.2f};x2M={per_agent_round/(2*M_bytes):.2f};"
+                f"storage_frac={np.mean(store)/M_bytes:.2f}",
+            )
+        )
+
+    # gossip comparison at n=10 (paper §4: IPLS transmits less than gossip)
+    shards = iid_split(x_tr, y_tr, 10, seed=0)
+    t0 = time.time()
+    hist = run_gossip(shards, x_te, y_te, rounds=rounds, fanout=2, local_iters=2)
+    gossip_per_agent = hist[-1]["bytes_total"] / 10 / rounds
+    results["gossip_n10"] = {"per_agent_bytes_per_round": gossip_per_agent}
+    rows.append(
+        csv_row(
+            "scalability_gossip_n10_fanout2",
+            (time.time() - t0) / rounds * 1e6,
+            f"per_agent_MBpr={gossip_per_agent/1e6:.2f};x2M={gossip_per_agent/(2*M_bytes):.2f}",
+        )
+    )
+    if out_json:
+        save_json(out_json, results)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

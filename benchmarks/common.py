@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: dataset, eval subsampling, CSV output."""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+from repro.data import iid_split, synth_mnist
+
+# evaluation uses a 2000-sample test subset and samples <=5 agents per round
+# (full-set, all-agent eval would dominate single-core runtime without
+# changing any relative conclusion)
+EVAL_N = 2000
+
+
+def load_data(num_train=60000, num_test=EVAL_N, seed=0):
+    return synth_mnist(num_train=num_train, num_test=num_test, seed=seed)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def emit(rows: List[str]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+def save_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)

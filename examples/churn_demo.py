@@ -1,0 +1,36 @@
+"""Fault-tolerance demo: agents leave, crash, disconnect and rejoin while
+training continues (paper §2.2 Terminate + Fig 3b).
+
+    PYTHONPATH=src python examples/churn_demo.py
+"""
+from repro.data import iid_split, synth_mnist
+from repro.fl import IPLSSimulation, SimConfig
+from repro.p2p.network import LOSSY
+
+def main():
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=8000, num_test=2000, seed=0)
+    shards = iid_split(x_tr, y_tr, num_agents=6, seed=0)
+
+    churn = {
+        3: [(5, "offline")],              # agent 5 loses connectivity
+        5: [(4, "leave")],                # agent 4 leaves gracefully (Terminate)
+        7: [(5, "online")],               # agent 5 rejoins (with memory)
+        9: [(3, "crash")],                # agent 3 fails without handoff
+    }
+    cfg = SimConfig(
+        num_agents=6, num_partitions=12, pi=3, rho=2, rounds=14,
+        local_iters=8, churn=churn, memory=True, conditions=LOSSY,
+    )
+    sim = IPLSSimulation(cfg, shards, x_te, y_te)
+    for rnd in range(cfg.rounds):
+        m = sim.run_round(rnd)
+        events = ",".join(a for _, a in churn.get(rnd, [])) or "-"
+        print(
+            f"round {rnd:2d} active={m['active']} acc={m['acc_mean']:.4f} "
+            f"(+/-{m['acc_std']:.4f}) churn=[{events}]"
+        )
+    assert sim.table.coverage(), "partition coverage lost!"
+    print("\npartition coverage preserved through leave/crash/rejoin ✓")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: decentralized federated training with IPLS in ~40 lines.
+
+Boots 5 agents on the simulated IPFS substrate, trains the paper's MLP on a
+synthetic MNIST-like dataset for 10 rounds, and compares against the
+centralized FedAvg baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.data import iid_split, synth_mnist
+from repro.fl import IPLSSimulation, SimConfig, run_centralized
+
+def main():
+    # 1. data: 60k synthetic MNIST-like samples, split IID over 5 agents
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=10000, num_test=2000, seed=0)
+    shards = iid_split(x_tr, y_tr, num_agents=5, seed=0)
+
+    # 2. IPLS: 10 model partitions, each agent responsible for >=2 (pi),
+    #    each partition replicated at most twice (rho)
+    cfg = SimConfig(
+        num_agents=5, num_partitions=10, pi=2, rho=2,
+        rounds=10, local_iters=10, batch_size=128,
+    )
+    sim = IPLSSimulation(cfg, shards, x_te, y_te)
+    history = sim.run()
+
+    # 3. centralized FedAvg reference on the same shards
+    central = run_centralized(shards, x_te, y_te, rounds=10, local_iters=10)
+
+    print(f"{'round':>5} {'IPLS acc':>10} {'central acc':>12}")
+    for h, c in zip(history, central):
+        print(f"{h['round']:>5} {h['acc_mean']:>10.4f} {c['acc_mean']:>12.4f}")
+    drop = (central[-1]["acc_mean"] - history[-1]["acc_mean"]) * 1000
+    print(f"\naccuracy drop due to decentralisation: {drop:.2f} per-mille")
+    print(f"total bytes over the (simulated) wire: {sim.net.pubsub.total_bytes()/1e6:.1f} MB")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serving example: batched prefill + decode loop with the serving cache
+(the decode_32k / long_500k path at smoke scale), including the context-
+parallel cache layout used on the production mesh.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-7b --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import build_model, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(0)
+    rng = np.random.default_rng(0)
+    B, P = args.batch, args.prompt_len
+    cache_len = P + args.tokens
+
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 255, (B, P)), jnp.int32),
+        "cache_len": cache_len,
+    }
+    if getattr(cfg, "mrope", False):
+        batch["positions3"] = jnp.broadcast_to(
+            jnp.arange(P)[None, None, :], (3, B, P)
+        ).astype(jnp.int32)
+    if cfg.name.startswith("whisper"):
+        batch["enc_embeds"] = jnp.asarray(rng.standard_normal((B, P, cfg.d_model)), jnp.bfloat16)
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, batch)
+    print(f"prefill({B}x{P}) -> logits {logits.shape} in {time.time()-t0:.2f}s")
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    generated = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        logits, cache = decode(params, cache, {"token": tok, "pos": jnp.asarray(P + i, jnp.int32)})
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        generated.append(np.asarray(tok))
+    dt = time.time() - t0
+    out = np.concatenate(generated, axis=1)
+    print(f"decoded {args.tokens} tokens/seq x {B} seqs in {dt:.2f}s "
+          f"({args.tokens*B/max(dt,1e-9):.1f} tok/s on CPU smoke config)")
+    print("first sequence:", out[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps through the
+FULL production path — model zoo config, IPLS train step (eps-weighted
+RS/update/AG semantics), sharded optimizer, checkpointing, restart.
+
+    PYTHONPATH=src python examples/train_lm_smoke.py --arch internlm2-1.8b --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import build_model, get_config
+from repro.configs.registry import ShapeSpec
+from repro.core.sharded import IplsStepConfig, init_state
+from repro.data import synth_tokens
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import build_train_step
+from repro.optim import adamw, cosine_warmup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/ipls_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    mesh = make_smoke_mesh()
+    shape = ShapeSpec("smoke_train", seq_len=args.seq, global_batch=args.batch, kind="train")
+    opt = adamw(cosine_warmup(3e-3, 20, args.steps), wd=0.01)
+    built = build_train_step(model, mesh, shape, optimizer=opt, step_cfg=IplsStepConfig())
+
+    state = init_state(model.init(0), opt)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume:
+        try:
+            host = jax.tree.map(np.asarray, state)
+            restored, start = mgr.restore_latest(host)
+            state = jax.tree.map(jnp.asarray, restored)
+            from repro.core.sharded import IplsTrainState
+            state = IplsTrainState(*state)
+            print(f"resumed from step {start}")
+        except FileNotFoundError:
+            print("no checkpoint found; starting fresh")
+
+    data = synth_tokens(4096, args.seq, min(cfg.vocab, 256), seed=0)
+    step_fn = jax.jit(built.fn, in_shardings=built.in_shardings, out_shardings=built.out_shardings)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    with built.mesh:
+        for i in range(start, args.steps):
+            sel = rng.integers(0, len(data), args.batch)
+            batch = {
+                "tokens": jnp.asarray(data[sel], jnp.int32),
+                "participation": jnp.ones((args.batch,), jnp.float32),
+            }
+            state, metrics = step_fn(state, batch)
+            if i % 20 == 0 or i == args.steps - 1:
+                print(
+                    f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.3f} eps={float(metrics['eps']):.3f} "
+                    f"({(time.time()-t0):.1f}s)"
+                )
+            if i > 0 and i % 100 == 0:
+                mgr.save_async(jax.tree.map(np.asarray, state), step=i)
+    mgr.wait()
+    print("done; final loss should be well below the ~5.5 random-init level")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Checkpoint/restore for fault tolerance (msgpack + raw buffers; no orbax in
+this container).
+
+Design for the 1000-node regime:
+  * Partition-aware: each IPLS partition owner ("data" rank) can write ONLY
+    its owned shard (``shard_id``/``num_shards``), so checkpoint bandwidth
+    scales out with the fleet instead of funnelling through one host — the
+    checkpoint plane mirrors the paper's Terminate() upload, where a leaving
+    agent persists exactly its own partitions to IPFS.
+  * Atomic: write to <dir>.tmp then rename; a crash mid-write never corrupts
+    the latest complete checkpoint.
+  * Async-friendly: ``CheckpointManager.save_async`` hands the host copy to a
+    background thread (device->host transfer happens before returning, so the
+    training step can continue mutating device buffers).
+  * Self-describing: dtype/shape/tree structure embedded; restore validates
+    against the expected tree when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save_checkpoint(
+    directory: str,
+    tree: Any,
+    step: int,
+    shard_id: int = 0,
+    num_shards: int = 1,
+) -> str:
+    """Write one shard of a checkpoint. Returns the final directory path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp{shard_id}"
+    os.makedirs(tmp, exist_ok=True)
+    named = _flatten_with_paths(tree)
+    index: Dict[str, Any] = {"step": step, "num_shards": num_shards, "arrays": {}}
+    blob_path = os.path.join(tmp, f"shard_{shard_id}.bin")
+    with open(blob_path, "wb") as f:
+        off = 0
+        for name, leaf in sorted(named.items()):
+            arr = np.asarray(leaf)
+            data = arr.tobytes()
+            index["arrays"][name] = {
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "offset": off,
+                "nbytes": len(data),
+            }
+            f.write(data)
+            off += len(data)
+    with open(os.path.join(tmp, f"index_{shard_id}.json"), "w") as f:
+        json.dump(index, f)
+    # atomic publish: first shard creates the final dir; others move in
+    os.makedirs(final, exist_ok=True)
+    for fname in os.listdir(tmp):
+        os.replace(os.path.join(tmp, fname), os.path.join(final, fname))
+    shutil.rmtree(tmp, ignore_errors=True)
+    # completion marker per shard
+    with open(os.path.join(final, f"COMMITTED_{shard_id}"), "w") as f:
+        f.write("ok")
+    return final
+
+
+def _is_complete(path: str, num_shards: int) -> bool:
+    return all(
+        os.path.exists(os.path.join(path, f"COMMITTED_{s}")) for s in range(num_shards)
+    )
+
+
+def latest_step(directory: str, num_shards: int = 1) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            full = os.path.join(directory, name)
+            try:
+                s = int(name.split("_")[1].split(".")[0])
+            except ValueError:
+                continue
+            if _is_complete(full, num_shards):
+                steps.append(s)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    like: Any,
+    step: Optional[int] = None,
+    shard_id: int = 0,
+    num_shards: int = 1,
+) -> tuple[Any, int]:
+    """Restore the (shard of the) tree. ``like`` supplies structure; leaves
+    are replaced by the stored arrays (validated for shape/dtype)."""
+    if step is None:
+        step = latest_step(directory, num_shards)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(final, f"index_{shard_id}.json")) as f:
+        index = json.load(f)
+    blob = open(os.path.join(final, f"shard_{shard_id}.bin"), "rb").read()
+    named = _flatten_with_paths(like)
+    out: Dict[str, np.ndarray] = {}
+    for name, meta in index["arrays"].items():
+        arr = np.frombuffer(
+            blob, dtype=np.dtype(meta["dtype"]), count=int(np.prod(meta["shape"])) if meta["shape"] else 1,
+            offset=meta["offset"],
+        ).reshape(meta["shape"])
+        out[name] = arr
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)
+    flat, treedef = leaves_with_paths
+    new_leaves = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if name not in out:
+            raise KeyError(f"checkpoint missing array {name}")
+        stored = out[name]
+        want_shape = tuple(leaf.shape) if hasattr(leaf, "shape") else None
+        if want_shape is not None and tuple(stored.shape) != want_shape:
+            raise ValueError(f"{name}: checkpoint shape {stored.shape} != expected {want_shape}")
+        new_leaves.append(stored)
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), new_leaves)
+    return tree, step
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; optional async save."""
+
+    def __init__(self, directory: str, keep: int = 3, num_shards: int = 1):
+        self.directory = directory
+        self.keep = keep
+        self.num_shards = num_shards
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, tree, step: int, shard_id: int = 0) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)  # device->host now
+        save_checkpoint(self.directory, host_tree, step, shard_id, self.num_shards)
+        self._gc()
+
+    def save_async(self, tree, step: int, shard_id: int = 0) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)  # copy BEFORE returning
+        self.wait()
+        self._thread = threading.Thread(
+            target=lambda: (
+                save_checkpoint(self.directory, host_tree, step, shard_id, self.num_shards),
+                self._gc(),
+            ),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, like, shard_id: int = 0):
+        return restore_checkpoint(
+            self.directory, like, None, shard_id, self.num_shards
+        )
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and "." not in n
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

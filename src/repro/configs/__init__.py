@@ -1,0 +1,19 @@
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    ShapeSpec,
+    build_model,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ShapeSpec",
+    "build_model",
+    "get_config",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,100 @@
+"""Architecture registry: ``--arch <id>`` resolution, model construction,
+shape table, and input_specs (ShapeDtypeStruct stand-ins, no allocation)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ArchConfig, TransformerLM
+from repro.models.whisper import WhisperConfig, WhisperModel
+
+ARCH_MODULES = {
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "whisper-base": "repro.configs.whisper_base",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+}
+
+ARCH_IDS = tuple(ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, reduced: bool = False):
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    return mod.reduced() if reduced else mod.config()
+
+
+def build_model(arch_or_cfg):
+    cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) else arch_or_cfg
+    if isinstance(cfg, WhisperConfig):
+        return WhisperModel(cfg)
+    return TransformerLM(cfg)
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """The assignment's skip rules (documented in DESIGN.md §5)."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; pure full-attention arch"
+    return True, ""
+
+
+def input_specs(cfg, shape: ShapeSpec, reduced_scale: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the given shape.
+
+    For train: the full federated batch (tokens + participation mask).
+    For prefill: the request batch. For decode: one new token + position.
+    ``reduced_scale`` shrinks seq/batch for CPU smoke testing.
+    """
+    S, B = shape.seq_len, shape.global_batch
+    if reduced_scale:
+        S, B = max(S // reduced_scale, 8), max(B // reduced_scale, 1)
+    i32 = jnp.int32
+    is_whisper = isinstance(cfg, WhisperConfig)
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "participation": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        if is_whisper:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        if getattr(cfg, "mrope", False):
+            specs["positions3"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if is_whisper:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        if getattr(cfg, "mrope", False):
+            specs["positions3"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return specs
+    # decode: one token against a cache of S
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }

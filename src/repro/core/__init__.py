@@ -1,0 +1,52 @@
+"""IPLS core: the paper's contribution.
+
+  partition.py    control plane — pi/rho partition assignment, join/leave
+  aggregation.py  data plane math — eps-staleness masked aggregation
+  api.py          the middleware API: Init/UpdateModel/LoadModel/Terminate
+  sharded.py      the TPU-mesh mapping — IPLS as reduce-scatter / all-gather
+"""
+from repro.core.partition import PartitionSpec, PartitionTable, flatten_params, unflatten_params
+from repro.core.aggregation import (
+    EpsState,
+    init_eps,
+    update_eps,
+    masked_mean,
+    aggregate_partition,
+    replica_consensus,
+    apply_staleness_decay,
+)
+from repro.core.api import IPLSAgent, reset_registry
+from repro.core.sharded import (
+    IplsTrainState,
+    IplsStepConfig,
+    make_train_step,
+    init_state,
+    state_shardings,
+    tree_shardings,
+    spec_for_leaf,
+    DEFAULT_RULES,
+)
+
+__all__ = [
+    "PartitionSpec",
+    "PartitionTable",
+    "flatten_params",
+    "unflatten_params",
+    "EpsState",
+    "init_eps",
+    "update_eps",
+    "masked_mean",
+    "aggregate_partition",
+    "replica_consensus",
+    "apply_staleness_decay",
+    "IPLSAgent",
+    "reset_registry",
+    "IplsTrainState",
+    "IplsStepConfig",
+    "make_train_step",
+    "init_state",
+    "state_shardings",
+    "tree_shardings",
+    "spec_for_leaf",
+    "DEFAULT_RULES",
+]

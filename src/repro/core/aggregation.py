@@ -1,0 +1,97 @@
+"""IPLS aggregation math (paper §2.2, UpdateModel).
+
+A responsible agent receives, for its partition k, deltas ``delta_k`` from r
+contributing agents. It applies
+
+    w_k <- w_k - eps * mean_contrib(delta_k)
+    eps <- alpha * eps + (1 - alpha) * (1 / r)
+
+``eps`` is the paper's staleness/confidence weight: with stable, full
+participation (r constant) eps converges to (1-alpha)/ ... -> 1/r-weighted
+step; with dropouts r shrinks and eps adapts. The paper leaves the exact
+reduction of the r deltas unstated beyond "exchange the newly calculated
+values ... to calculate the new global parameters"; we use the masked mean
+(FedAvg reduction), the natural choice that makes IPLS == centralized FedAvg
+under perfect connectivity. That equivalence is property-tested.
+
+All functions are pure jax and jit-safe; contribution masks make them usable
+under lax control flow and under shard_map (see core/sharded.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EpsState(NamedTuple):
+    """Per-partition staleness weight state."""
+
+    eps: jax.Array  # scalar or per-partition vector
+    alpha: jax.Array  # scalar smoothing in (0, 1)
+
+
+def init_eps(alpha: float = 0.5, shape=()) -> EpsState:
+    return EpsState(eps=jnp.ones(shape, jnp.float32), alpha=jnp.asarray(alpha, jnp.float32))
+
+
+def update_eps(state: EpsState, r: jax.Array) -> EpsState:
+    """eps <- alpha*eps + (1-alpha)*(1/r); r==0 keeps eps unchanged."""
+    r = jnp.asarray(r, jnp.float32)
+    safe_r = jnp.maximum(r, 1.0)
+    new = state.alpha * state.eps + (1.0 - state.alpha) / safe_r
+    eps = jnp.where(r > 0, new, state.eps)
+    return EpsState(eps=eps, alpha=state.alpha)
+
+
+def masked_mean(deltas: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean of ``deltas`` over axis 0 counting only rows with mask==1.
+
+    deltas: (A, ...) one delta per (potential) contributor.
+    mask:   (A,) 1.0 where the contribution arrived this round.
+    Rows with mask==0 contribute nothing; if nobody contributed the result is 0.
+    """
+    mask = mask.astype(deltas.dtype)
+    r = jnp.sum(mask)
+    total = jnp.einsum("a,a...->...", mask, deltas)
+    return jnp.where(r > 0, total / jnp.maximum(r, 1.0), jnp.zeros_like(total))
+
+
+def aggregate_partition(
+    w_k: jax.Array,
+    deltas: jax.Array,
+    mask: jax.Array,
+    eps_state: EpsState,
+) -> tuple[jax.Array, EpsState]:
+    """One IPLS aggregation step for a single partition.
+
+    Returns the new partition value and the updated eps state. Matches the
+    paper: subtract the (masked-mean) delta scaled by eps, then update eps
+    from the contributor count r.
+    """
+    r = jnp.sum(mask.astype(jnp.float32))
+    agg = masked_mean(deltas, mask)
+    new_w = w_k - eps_state.eps * agg
+    return new_w, update_eps(eps_state, r)
+
+
+def replica_consensus(values: jax.Array, weights: jax.Array | None = None) -> jax.Array:
+    """Merge rho replica copies of a partition into one value.
+
+    Replicas may diverge under asynchrony (paper Fig 3a: higher rho -> higher
+    variance). Consensus = (weighted) mean; weights default to uniform.
+    values: (rho, ...).
+    """
+    if weights is None:
+        return jnp.mean(values, axis=0)
+    weights = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    return jnp.einsum("r,r...->...", weights, values)
+
+
+def apply_staleness_decay(delta: jax.Array, age_rounds: jax.Array, beta: float = 0.5) -> jax.Array:
+    """Down-weight a late-arriving delta by beta**age (beyond-paper: the paper
+    notes messages 'may be delivered after the start of the next training
+    iteration'; this implements the standard staleness discount used when we
+    do apply them)."""
+    return delta * jnp.power(jnp.asarray(beta, delta.dtype), age_rounds.astype(delta.dtype))

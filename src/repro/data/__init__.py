@@ -1,0 +1,12 @@
+from repro.data.synthetic import synth_mnist, synth_tokens
+from repro.data.federated_split import iid_split, dirichlet_split
+from repro.data.pipeline import batch_iterator, FederatedDataset
+
+__all__ = [
+    "synth_mnist",
+    "synth_tokens",
+    "iid_split",
+    "dirichlet_split",
+    "batch_iterator",
+    "FederatedDataset",
+]

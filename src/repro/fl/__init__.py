@@ -1,0 +1,12 @@
+from repro.fl.local_trainer import LocalTrainer
+from repro.fl.centralized import run_centralized
+from repro.fl.rounds import IPLSSimulation, SimConfig
+from repro.fl.gossip import run_gossip
+
+__all__ = [
+    "LocalTrainer",
+    "run_centralized",
+    "IPLSSimulation",
+    "SimConfig",
+    "run_gossip",
+]

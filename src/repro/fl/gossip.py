@@ -1,0 +1,72 @@
+"""Segmented-gossip baseline (Hu et al., arXiv:1908.07782) — the related-work
+comparison in paper §4.
+
+Every agent keeps a full local model. Each round: local SGD, then pull each
+*segment* (partition) from ``fanout`` random peers and average. Unlike IPLS
+there is no responsibility/ownership: every agent stores the whole model and
+per-segment traffic grows with the fanout. Used by the scalability benchmark
+to reproduce the paper's traffic comparison.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.partition import PartitionSpec, flatten_params
+from repro.fl.local_trainer import LocalTrainer
+from repro.models import mlp_mnist
+
+
+def run_gossip(
+    shards: List[Tuple[np.ndarray, np.ndarray]],
+    x_test: np.ndarray,
+    y_test: np.ndarray,
+    rounds: int = 40,
+    fanout: int = 2,
+    num_partitions: int = 10,
+    lr: float = 0.1,
+    local_iters: int = 10,
+    batch_size: int = 128,
+    seed: int = 0,
+) -> List[dict]:
+    rng = np.random.default_rng(seed)
+    n = len(shards)
+    w0, _ = flatten_params(mlp_mnist.init_params(seed))
+    spec = PartitionSpec.even(w0.size, num_partitions)
+    offsets = spec.offsets()
+    models = [w0.copy() for _ in range(n)]
+    trainers = [
+        LocalTrainer(a, x, y, lr, local_iters, batch_size, seed)
+        for a, (x, y) in enumerate(shards)
+    ]
+    history = []
+    total_bytes = 0
+    for rnd in range(rounds):
+        # local training
+        for a in range(n):
+            delta = trainers[a].train_delta(models[a].copy())
+            models[a] = models[a] - delta
+        # segmented gossip pull: per segment, average over fanout random peers
+        new_models = []
+        for a in range(n):
+            acc = models[a].copy()
+            for k in range(spec.num_partitions):
+                lo, hi = offsets[k], offsets[k] + spec.sizes[k]
+                peers = rng.choice([p for p in range(n) if p != a], size=min(fanout, n - 1), replace=False)
+                seg = np.mean([models[p][lo:hi] for p in peers] + [models[a][lo:hi]], axis=0)
+                acc[lo:hi] = seg
+                total_bytes += int(spec.sizes[k] * 4 * len(peers))
+            new_models.append(acc)
+        models = new_models
+        accs = np.array([trainers[0].evaluate(m, x_test, y_test) for m in models])
+        history.append(
+            {
+                "round": rnd,
+                "acc_mean": float(accs.mean()),
+                "acc_std": float(accs.std()),
+                "acc_max": float(accs.max()),
+                "bytes_total": total_bytes,
+            }
+        )
+    return history

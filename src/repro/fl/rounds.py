@@ -1,0 +1,169 @@
+"""Round-structured IPLS simulation: the paper's experiments, end to end.
+
+Wires together: SimIPFS substrate (loss/delay), PartitionTable (pi/rho),
+IPLSAgent middleware (Init/UpdateModel/LoadModel/Terminate), LocalTrainer
+(local SGD on the agent's private shard), churn schedules, and evaluation.
+
+One simulated round =
+  train -> UpdateModel -> tick -> collect -> aggregate -> replies/replica
+  sync -> tick -> receive -> (evaluate)
+which matches the paper's asynchronous round structure: messages delayed past
+a tick are picked up in a later round; lost messages simply never arrive and
+the eps-weighting absorbs the shrunken contributor count r.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.api import IPLSAgent, reset_registry
+from repro.core.partition import PartitionSpec, PartitionTable
+from repro.fl.local_trainer import LocalTrainer
+from repro.models import mlp_mnist
+from repro.core.partition import flatten_params
+from repro.p2p.ipfs_sim import SimIPFS
+from repro.p2p.network import NetworkConditions, PERFECT
+
+
+@dataclasses.dataclass
+class SimConfig:
+    num_agents: int = 10
+    num_partitions: int = 10
+    pi: int = 2
+    rho: int = 1
+    alpha: float = 0.5
+    rounds: int = 40
+    lr: float = 0.1
+    local_iters: int = 10
+    batch_size: int = 128
+    seed: int = 0
+    eval_agents: int = 0  # evaluate at most this many agents per round (0 = all)
+    conditions: NetworkConditions = PERFECT
+    # churn: map round -> list of (agent_id, "offline"|"online"|"leave"|"crash"|"join")
+    churn: Optional[Dict[int, List[Tuple[int, str]]]] = None
+    memory: bool = True  # False = 'memoryless training' (paper Fig 3b)
+
+
+class IPLSSimulation:
+    def __init__(self, cfg: SimConfig, shards, x_test, y_test):
+        self.cfg = cfg
+        self.x_test, self.y_test = x_test, y_test
+        reset_registry()
+        self.net = SimIPFS(cfg.conditions, cfg.seed)
+        w0_params = mlp_mnist.init_params(cfg.seed)
+        self.w0, self.layout = flatten_params(w0_params)
+        self.spec = PartitionSpec.even(self.w0.size, cfg.num_partitions)
+        self.table = PartitionTable(cfg.num_partitions, cfg.pi, cfg.rho)
+        self.agents: Dict[int, IPLSAgent] = {}
+        self.trainers: Dict[int, LocalTrainer] = {}
+        for a in range(cfg.num_agents):
+            agent = IPLSAgent(a, self.net, self.table, self.spec, cfg.alpha)
+            agent.init(self.w0 if a == 0 else None)
+            self.agents[a] = agent
+            x, y = shards[a]
+            self.trainers[a] = LocalTrainer(
+                a, x, y, cfg.lr, cfg.local_iters, cfg.batch_size, cfg.seed
+            )
+        self.history: List[dict] = []
+
+    # -- churn handling -----------------------------------------------------
+    def _apply_churn(self, rnd: int) -> None:
+        if not self.cfg.churn:
+            return
+        for agent_id, action in self.cfg.churn.get(rnd, []):
+            if action == "offline":
+                self.net.pubsub.set_offline(agent_id, True)
+            elif action == "online":
+                self.net.pubsub.set_offline(agent_id, False)
+                if not self.cfg.memory and agent_id in self.agents:
+                    # memoryless rejoin: lose the cached global parts
+                    self.agents[agent_id].cache.clear()
+            elif action == "leave":
+                if agent_id in self.agents:
+                    self.agents[agent_id].terminate()
+            elif action == "crash":
+                if agent_id in self.agents:
+                    self.agents[agent_id].crash()
+            elif action == "join":
+                agent = IPLSAgent(agent_id, self.net, self.table, self.spec, self.cfg.alpha)
+                agent.init()
+                self.agents[agent_id] = agent
+
+    def _live_online(self) -> List[int]:
+        return [
+            a
+            for a, ag in self.agents.items()
+            if ag.live and not self.net.pubsub.is_offline(a)
+        ]
+
+    # -- one round ------------------------------------------------------------
+    def run_round(self, rnd: int) -> dict:
+        self._apply_churn(rnd)
+        active = self._live_online()
+
+        # 0. collect missing global parameters (paper: 'each agent initially
+        # contacts enough agents to collect the global parameters'; also how
+        # rejoining agents warm back up)
+        for a in active:
+            self.agents[a].request_missing(rnd)
+        self.net.tick()
+        for a in active:
+            self.agents[a].serve_fetches()
+        self.net.tick()
+        for a in active:
+            self.agents[a].receive_replies()
+
+        # 1. local training + UpdateModel
+        for a in active:
+            if a not in self.trainers:
+                continue
+            w = self.agents[a].load_model()
+            delta = self.trainers[a].train_delta(w)
+            self.agents[a].update_model(delta, rnd)
+        self.net.tick()
+
+        # 2. holders aggregate + reply; replicas sync
+        for a in active:
+            self.agents[a].collect()
+        for a in active:
+            self.agents[a].aggregate()
+        for a in active:
+            self.agents[a].serve_replies()
+            self.agents[a].sync_replicas(rnd)
+        self.net.tick()
+        for a in active:
+            self.agents[a].receive_replies()
+            self.agents[a].merge_replicas()
+
+        # 3. evaluate the assembled model
+        metrics = self.evaluate()
+        metrics["round"] = rnd
+        metrics["active"] = len(active)
+        metrics["bytes_total"] = self.net.pubsub.total_bytes()
+        self.history.append(metrics)
+        return metrics
+
+    def evaluate(self) -> dict:
+        accs = []
+        any_trainer = next(iter(self.trainers.values()))
+        live = [a for a, ag in self.agents.items() if ag.live]
+        if self.cfg.eval_agents and len(live) > self.cfg.eval_agents:
+            # deterministic spread over the live set
+            stride = max(len(live) // self.cfg.eval_agents, 1)
+            live = live[::stride][: self.cfg.eval_agents]
+        for a in live:
+            w = self.agents[a].load_model()
+            accs.append(any_trainer.evaluate(w, self.x_test, self.y_test))
+        accs = np.array(accs) if accs else np.array([0.0])
+        return {
+            "acc_mean": float(accs.mean()),
+            "acc_std": float(accs.std()),
+            "acc_max": float(accs.max()),
+        }
+
+    def run(self) -> List[dict]:
+        for rnd in range(self.cfg.rounds):
+            self.run_round(rnd)
+        return self.history

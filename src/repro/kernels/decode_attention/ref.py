@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: one-token decode attention against a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_ref(q, k, v, pos):
+    """q: (B,H,D) one new token; k,v: (B,H,S,D) cache; pos: () number of
+    valid positions (0..pos inclusive are attended)."""
+    S = k.shape[2]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhd,bhtd->bht", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(S)[None, None, :] <= pos
+    logits = jnp.where(valid, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", probs.astype(q.dtype), v)

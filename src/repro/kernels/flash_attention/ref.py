@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mha_ref(q, k, v, causal: bool = True, window: Optional[int] = None):
+    """q,k,v: (B, H, S, D). fp32 softmax; returns (B, H, S, D) in q.dtype."""
+    S = q.shape[2]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        ii = jnp.arange(S)
+        mask = ii[:, None] >= ii[None, :]
+        if window is not None:
+            mask &= ii[:, None] - ii[None, :] < window
+        logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(q.dtype), v)

@@ -1,0 +1,68 @@
+"""Fused IPLS partition aggregation — Pallas TPU kernel.
+
+One pass over HBM: reads the R replica/contributor deltas tile-by-tile into
+VMEM, reduces them with the participation mask, and applies the eps-weighted
+update to the partition value. Replaces (R reads + 1 reduce + 1 axpy) XLA
+ops with a single fused kernel; on TPU this is HBM-bandwidth-bound, so the
+fusion removes R+1 extra round-trips of the partition through HBM.
+
+Tiling: the flat partition is viewed as (rows, 128) lanes; each grid step
+owns a (BR, 128) tile (BR=256 rows => 128 KiB f32 per delta in VMEM; with
+R<=16 contributors the working set stays ~2 MiB << 16 MiB VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BR = 256  # tile rows; lanes fixed at 128
+LANES = 128
+
+
+def _kernel(mask_eps_ref, w_ref, deltas_ref, out_ref):
+    # mask_eps_ref: (R+2,) SMEM-ish small vector: [mask(R), r_count, eps]
+    # w_ref: (BR, 128); deltas_ref: (R, BR, 128)
+    me = mask_eps_ref[...]
+    R = deltas_ref.shape[0]
+    mask = me[:R]
+    r_count = me[R]
+    eps = me[R + 1]
+    acc = jnp.zeros(w_ref.shape, jnp.float32)
+    for r in range(R):  # static unroll: R is a compile-time constant
+        acc = acc + mask[r] * deltas_ref[r].astype(jnp.float32)
+    inv = jnp.where(r_count > 0, 1.0 / jnp.maximum(r_count, 1.0), 0.0)
+    out_ref[...] = (w_ref[...].astype(jnp.float32) - eps * acc * inv).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ipls_aggregate(w, deltas, mask, eps, interpret: bool = True):
+    """w: (N,), deltas: (R,N), mask: (R,), eps: (). N padded to BR*128."""
+    N = w.shape[0]
+    R = deltas.shape[0]
+    tile = BR * LANES
+    pad = (-N) % tile
+    wp = jnp.pad(w, (0, pad))
+    dp = jnp.pad(deltas, ((0, 0), (0, pad)))
+    rows = (N + pad) // LANES
+    w2 = wp.reshape(rows, LANES)
+    d2 = dp.reshape(R, rows, LANES)
+    grid = (rows // BR,)
+    mask_f = mask.astype(jnp.float32)
+    me = jnp.concatenate([mask_f, jnp.sum(mask_f)[None], eps.astype(jnp.float32)[None]])
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((R + 2,), lambda i: (0,)),
+            pl.BlockSpec((BR, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((R, BR, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BR, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), w.dtype),
+        interpret=interpret,
+    )(me, w2, d2)
+    return out.reshape(-1)[:N]

@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the fused IPLS aggregation kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ipls_aggregate.ipls_aggregate import ipls_aggregate
+from repro.kernels.ipls_aggregate.ref import ipls_aggregate_ref
+
+
+def aggregate(w, deltas, mask, eps, use_kernel: bool = True, interpret: bool = True):
+    """Fused w <- w - eps*masked_mean(deltas). interpret=True validates the
+    TPU kernel body on CPU; on real TPU pass interpret=False."""
+    if use_kernel:
+        return ipls_aggregate(w, deltas, mask, eps, interpret=interpret)
+    return ipls_aggregate_ref(w, deltas, mask, eps)

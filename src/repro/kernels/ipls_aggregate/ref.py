@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused IPLS aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ipls_aggregate_ref(
+    w: jax.Array,        # (N,) current partition value
+    deltas: jax.Array,   # (R, N) one delta per (potential) contributor
+    mask: jax.Array,     # (R,) 1.0 where the contribution arrived
+    eps: jax.Array,      # () staleness weight
+) -> jax.Array:
+    """w - eps * masked_mean(deltas); empty mask leaves w unchanged."""
+    mask = mask.astype(jnp.float32)
+    r = jnp.sum(mask)
+    agg = jnp.einsum("r,rn->n", mask, deltas.astype(jnp.float32))
+    agg = jnp.where(r > 0, agg / jnp.maximum(r, 1.0), jnp.zeros_like(agg))
+    return (w.astype(jnp.float32) - eps.astype(jnp.float32) * agg).astype(w.dtype)

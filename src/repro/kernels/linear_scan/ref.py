@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: RWKV6/GLA recurrence, step-by-step (the slow exact form).
+
+    out_t = r_t · S_{t-1} + r_t · (u ⊙ k_t) v_t^T
+    S_t   = diag(w_t) · S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, logw, u, init_state=None):
+    """r,k,v,logw: (B,T,H,K); u: (H,K). Returns (out (B,T,H,K), S (B,H,K,K))."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,K)...
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S) + jnp.einsum(
+            "bhk,hk,bhk,bhv->bhv", rt, u, kt, vt
+        )
+        S = S * jnp.exp(wt)[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, logw))
+    S, outs = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(outs, 0, 1), S

@@ -1,0 +1,17 @@
+"""jit'd wrapper for int8 gradient compression with error feedback."""
+from __future__ import annotations
+
+from repro.kernels.quantize.quantize import dequantize, quantize
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+
+def compress(x, err, use_kernel: bool = True, interpret: bool = True):
+    if use_kernel:
+        return quantize(x, err, interpret=interpret)
+    return quantize_ref(x, err)
+
+
+def decompress(q, scales, use_kernel: bool = True, interpret: bool = True):
+    if use_kernel:
+        return dequantize(q, scales, interpret=interpret)
+    return dequantize_ref(q, scales)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: block-wise int8 quantization with error feedback.
+
+The compressed-UpdateModel path: IPLS agents on WAN links (paper setting)
+and compressed reduce-scatter at pod scale both send int8 deltas; the error
+feedback accumulator keeps the quantization noise from biasing convergence
+(Karimireddy et al., arXiv:1901.09847).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def quantize_ref(x: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x, err: (N,) with N % BLOCK == 0. Returns (q int8, scales, new_err)."""
+    n = x.shape[0]
+    xb = (x + err).reshape(n // BLOCK, BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / safe), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * safe
+    new_err = (xb - deq).reshape(-1)
+    return q.reshape(-1), scale[:, 0], new_err
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    n = q.shape[0]
+    qb = q.reshape(n // BLOCK, BLOCK).astype(jnp.float32)
+    return (qb * jnp.maximum(scales[:, None], 1e-12)).reshape(-1)

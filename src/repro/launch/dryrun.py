@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and report memory/cost/roofline terms.
+
+MUST be run as a module entry point (the XLA_FLAGS line above executes before
+any jax import): ``PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b``.
+
+For every applicable (arch, shape):
+    single-pod mesh (16,16) ("data","model")      -> roofline table entry
+    multi-pod mesh (2,16,16) ("pod","data","model") -> proves the pod axis
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs in the system — the run exits non-zero.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    import jax
+    from repro.configs import SHAPES, build_model, get_config, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step, lower_step
+    from repro.roofline.analysis import analyze_compiled, model_flops_for
+
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod, "status": "skipped", "why": why}
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(len(mesh.device_ids.flat))
+    kw = {}
+    if shape.kind == "train":
+        from repro.core.sharded import IplsStepConfig
+        from repro.launch.steps import TRAIN_OVERRIDES
+        kw["step_cfg"] = IplsStepConfig(**TRAIN_OVERRIDES.get(arch, {}))
+    built = build_step(model, mesh, shape, **kw)
+    lowered = lower_step(built)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    report = analyze_compiled(
+        compiled,
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=mesh_desc,
+        chips=chips,
+        model_flops=model_flops_for(model, shape.kind, shape.seq_len, shape.global_batch),
+    )
+    row = report.row()
+    row.update(
+        status="ok",
+        multi_pod=multi_pod,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        arg_bytes_per_dev=getattr(mem, "argument_size_in_bytes", None),
+        temp_bytes_per_dev=getattr(mem, "temp_size_in_bytes", None),
+        output_bytes_per_dev=getattr(mem, "output_size_in_bytes", None),
+        collective_bytes=report.collective_bytes,
+    )
+    if verbose:
+        print(f"--- {arch} x {shape_name} x {mesh_desc} ---")
+        print(f"memory_analysis: args={row['arg_bytes_per_dev']} temp={row['temp_bytes_per_dev']} "
+              f"out={row['output_bytes_per_dev']} (per device)")
+        print(f"cost_analysis: global_flops={report.hlo_flops:.3e} global_bytes={report.hlo_bytes:.3e}")
+        print(f"roofline: compute={report.compute_s*1e3:.2f}ms memory={report.memory_s*1e3:.2f}ms "
+              f"collective={report.collective_s*1e3:.2f}ms bottleneck={report.bottleneck} "
+              f"useful={report.useful_flops_ratio:.3f} frac={report.roofline_fraction:.3f}")
+        sys.stdout.flush()
+    return row
+
+
+def main() -> int:
+    from repro.configs import ARCH_IDS, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    rows, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                try:
+                    row = run_cell(arch, shape, multi_pod)
+                    rows.append(row)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, multi_pod, repr(e)))
+                    rows.append({
+                        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+                        "status": "FAILED", "error": repr(e),
+                    })
+                if args.out:
+                    with open(args.out, "w") as f:
+                        for r in rows:
+                            f.write(json.dumps(r) + "\n")
+    print(f"\n=== dry-run complete: {sum(r['status']=='ok' for r in rows)} ok, "
+          f"{sum(r['status']=='skipped' for r in rows)} skipped, {len(failures)} FAILED ===")
+    for f_ in failures:
+        print("FAILED:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

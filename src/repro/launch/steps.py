@@ -1,0 +1,219 @@
+"""Step builders: assemble (model, optimizer, mesh, shape) into jittable
+train / prefill / decode steps with full input/output shardings.
+
+This is where the IPLS mapping becomes concrete:
+    grads   -> sharded over "data" (reduce-scatter: UpdateModel)
+    opt     -> sharded over "data" (responsible-agent update, ZeRO-1)
+    params  -> replicated over "data" (all-gather: LoadModel), or sharded
+               when fsdp=True (lightweight storage; per-layer gather in scan)
+    pod axis-> replica consensus (all-reduce of aggregated updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec, input_specs
+from repro.core.sharded import (
+    DEFAULT_RULES,
+    IplsStepConfig,
+    init_state,
+    make_train_step,
+    state_shardings,
+    tree_shardings,
+)
+from repro.launch.mesh import dp_axes, make_rules
+from repro.models.sharding_hooks import activation_sharding
+from repro.models.whisper import WhisperModel
+from repro.optim.optimizers import Optimizer, adamw
+from repro.optim.schedules import cosine_warmup
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                       # the python callable (pre-jit)
+    in_shardings: Any
+    out_shardings: Any
+    arg_shapes: tuple             # ShapeDtypeStructs to .lower() with
+    mesh: Mesh
+    rules: Dict[str, Any]
+
+
+def _batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh, rules) -> Dict[str, Any]:
+    from repro.core.sharded import mesh_axis_size
+
+    dp = rules.get("batch")
+    dp_size = mesh_axis_size(mesh, dp)
+
+    def maybe(axis_dim: int):
+        return dp if axis_dim % dp_size == 0 and axis_dim >= dp_size else None
+
+    out = {}
+    for name, spec in specs.items():
+        if name in ("tokens", "token"):
+            out[name] = NamedSharding(mesh, P(maybe(spec.shape[0]), None))
+        elif name == "participation":
+            out[name] = NamedSharding(mesh, P(maybe(spec.shape[0])))
+        elif name == "positions3":
+            out[name] = NamedSharding(mesh, P(None, maybe(spec.shape[1]), None))
+        elif name == "enc_embeds":
+            out[name] = NamedSharding(mesh, P(maybe(spec.shape[0]), None, None))
+        else:  # scalars (pos)
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+def default_optimizer(total_steps: int = 10000) -> Optimizer:
+    return adamw(cosine_warmup(3e-4, 200, total_steps), wd=0.1)
+
+
+# Per-arch training-step configuration (memory-driven). qwen2-vl-72b REQUIRES
+# the IPLS lightweight-storage (FSDP) mode to fit v5e HBM: params stored
+# partition-sharded over "data", gathered per layer inside the scan — exactly
+# the paper's 'agents store only their own partitions + LoadModel on demand'.
+TRAIN_OVERRIDES: Dict[str, dict] = {
+    "qwen2-vl-72b": {"fsdp": True},
+    "deepseek-v2-lite-16b": {"fsdp": True},
+}
+
+
+def build_train_step(
+    model,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    optimizer: Optional[Optimizer] = None,
+    step_cfg: Optional[IplsStepConfig] = None,
+    extra_rules: Optional[dict] = None,
+) -> BuiltStep:
+    cfg = model.cfg
+    optimizer = optimizer or default_optimizer()
+    num_agents = 1
+    for a in dp_axes(mesh):
+        num_agents *= mesh.shape[a]
+    step_cfg = step_cfg or IplsStepConfig()
+    rules = dict(DEFAULT_RULES, **make_rules(mesh, "train"))
+    rules.update(cfg.sharding_overrides)
+    rules.update(extra_rules or {})
+
+    params_shapes = model.param_shapes()
+    axes = model.axes()
+    state_shapes = jax.eval_shape(partial(init_state, optimizer=optimizer), params_shapes)
+    state_sh = state_shardings(axes, params_shapes, optimizer, mesh, rules, fsdp=step_cfg.fsdp)
+    batch_specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(batch_specs, mesh, rules)
+    metrics_sh = {k: NamedSharding(mesh, P()) for k in ("loss", "grad_norm", "participation", "eps")}
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    # ZeRO-1 (partition-owned) layout for the in-step parameter update: the
+    # LoadModel all-gather then moves after the bf16 cast (2x wire saving)
+    update_sh = tree_shardings(axes, params_shapes, mesh, rules, "data")
+    raw_step = make_train_step(
+        loss_fn, optimizer, step_cfg, num_agents=num_agents, update_shardings=update_sh
+    )
+
+    def train_step(state, batch):
+        with activation_sharding(mesh, rules):
+            return raw_step(state, batch)
+
+    return BuiltStep(
+        fn=train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        arg_shapes=(state_shapes, batch_specs),
+        mesh=mesh,
+        rules=rules,
+    )
+
+
+def _cache_shapes_and_axes(model, shape: ShapeSpec):
+    from repro.models.param_defs import axes_tree, shape_tree
+
+    B, S = shape.global_batch, shape.seq_len
+    if isinstance(model, WhisperModel):
+        defs = model.cache_defs(B, S, S)
+    else:
+        defs = model.cache_defs(B, S)
+    return shape_tree(defs), axes_tree(defs)
+
+
+def build_prefill_step(model, mesh: Mesh, shape: ShapeSpec, extra_rules: Optional[dict] = None) -> BuiltStep:
+    cfg = model.cfg
+    rules = dict(DEFAULT_RULES, **make_rules(mesh, "prefill"))
+    rules.update(cfg.sharding_overrides)
+    rules.update(extra_rules or {})
+    params_shapes = model.param_shapes()
+    param_sh = tree_shardings(model.axes(), params_shapes, mesh, rules)
+    batch_specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(batch_specs, mesh, rules)
+    cache_shapes, cache_axes = _cache_shapes_and_axes(model, shape)
+    # the cache built by prefill is stored in DECODE layout (context-parallel)
+    decode_rules = dict(DEFAULT_RULES, **make_rules(mesh, "decode", shape.seq_len > 100_000))
+    decode_rules.update(cfg.sharding_overrides)
+    cache_sh = tree_shardings(cache_axes, cache_shapes, mesh, decode_rules)
+    logits_sh = NamedSharding(mesh, P(rules.get("batch"), None, None))
+
+    def prefill_step(params, batch):
+        with activation_sharding(mesh, rules):
+            return model.prefill(params, batch)
+
+    return BuiltStep(
+        fn=prefill_step,
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=(logits_sh, cache_sh),
+        arg_shapes=(params_shapes, batch_specs),
+        mesh=mesh,
+        rules=rules,
+    )
+
+
+def build_decode_step(model, mesh: Mesh, shape: ShapeSpec, extra_rules: Optional[dict] = None) -> BuiltStep:
+    cfg = model.cfg
+    long_ctx = shape.seq_len > 100_000
+    rules = dict(DEFAULT_RULES, **make_rules(mesh, "decode", long_ctx))
+    rules.update(cfg.sharding_overrides)
+    rules.update(extra_rules or {})
+    params_shapes = model.param_shapes()
+    param_sh = tree_shardings(model.axes(), params_shapes, mesh, rules)
+    cache_shapes, cache_axes = _cache_shapes_and_axes(model, shape)
+    cache_sh = tree_shardings(cache_axes, cache_shapes, mesh, rules)
+    batch_specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(batch_specs, mesh, rules)
+    logits_sh = NamedSharding(mesh, P(rules.get("batch") if shape.global_batch > 1 else None, None, None))
+
+    def decode_step(params, cache, batch):
+        with activation_sharding(mesh, rules):
+            return model.decode_step(params, cache, batch)
+
+    return BuiltStep(
+        fn=decode_step,
+        in_shardings=(param_sh, cache_sh, batch_sh),
+        out_shardings=(logits_sh, cache_sh),
+        arg_shapes=(params_shapes, cache_shapes, batch_specs),
+        mesh=mesh,
+        rules=rules,
+    )
+
+
+def build_step(model, mesh: Mesh, shape: ShapeSpec, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(model, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, mesh, shape, **kw)
+    return build_decode_step(model, mesh, shape, **kw)
+
+
+def lower_step(built: BuiltStep):
+    jitted = jax.jit(
+        built.fn,
+        in_shardings=built.in_shardings,
+        out_shardings=built.out_shardings,
+    )
+    with built.mesh:
+        return jitted.lower(*built.arg_shapes)

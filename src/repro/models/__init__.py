@@ -1,0 +1,3 @@
+from repro.models import mlp_mnist
+
+__all__ = ["mlp_mnist"]

@@ -1,0 +1,631 @@
+"""Composable transformer layers: norms, RoPE (std / M-RoPE), attention
+(full / GQA / sliding-window / MLA), GLU MLPs, MoE with sort-based dispatch.
+
+Everything is a pair of functions:
+    init_<block>(cfg-ish args)            -> nested dict of ParamDef
+    apply_<block>(params, x, ...)         -> y (and cache for attention)
+Attention supports three modes:
+    train/prefill: full-sequence causal (or bidirectional) attention;
+    decode:        one new token against a (possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param_defs import ParamDef
+from repro.models.sharding_hooks import shard_act
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Dict[str, ParamDef]:
+    return {
+        "scale": ParamDef((d,), (None,), init="ones"),
+        "bias": ParamDef((d,), (None,), init="zeros"),
+    }
+
+
+def layer_norm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(rotary_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, rotary_dim, 2, dtype=np.float32) / rotary_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_dim: Optional[int] = None) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    freqs = jnp.asarray(rope_freqs(rd, theta))  # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,rd/2)
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2 :]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rd:]], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float = 1000000.0,
+                sections: Tuple[int, int, int] = (16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions3 (3, ..., S) = (t, h, w) ids;
+    the rotary spectrum is split into three sections, one per component.
+    ``sections`` are in units of freq pairs and must sum to hd/2."""
+    hd = x.shape[-1]
+    assert sum(sections) * 2 == hd, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    # pick a position component per frequency band
+    comp = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (hd/2,)
+    pos = jnp.take(positions3.astype(jnp.float32), comp, axis=0)  # (hd/2, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., S, hd/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / sliding / bidirectional / cross)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    window: Optional[int] = None        # sliding-window size (None = full)
+    causal: bool = True                  # False for encoder self-attention
+    rope: str = "std"                    # "std" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    bias: bool = False
+
+
+def init_attention(s: AttnSpec) -> Dict[str, Any]:
+    d, h, kv, hd = s.d_model, s.n_heads, s.kv_heads, s.head_dim
+    defs: Dict[str, Any] = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+    if s.bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", None), init="zeros")
+        defs["bk"] = ParamDef((kv, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = ParamDef((kv, hd), ("kv_heads", None), init="zeros")
+    if s.qk_norm:
+        defs["q_norm"] = init_rmsnorm(hd)
+        defs["k_norm"] = init_rmsnorm(hd)
+    return defs
+
+
+def _proj_qkv(params, s: AttnSpec, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if s.bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if s.qk_norm:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    return q, k, v
+
+
+def _rope_qk(s: AttnSpec, q, k, positions):
+    if s.rope == "std":
+        q = apply_rope(q, positions, s.rope_theta)
+        k = apply_rope(k, positions, s.rope_theta)
+    elif s.rope == "mrope":
+        q = apply_mrope(q, positions, s.rope_theta, s.mrope_sections)
+        k = apply_mrope(k, positions, s.rope_theta, s.mrope_sections)
+    return q, k
+
+
+def _sdpa(q, k, v, mask, n_rep: int) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); mask broadcastable to (B,1,S,T)."""
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthk->bshk", probs, v)
+
+
+def causal_mask(S: int, T: int, window: Optional[int] = None, offset: int = 0):
+    """(1,1,S,T) mask; offset = query position of row 0 within the T axis."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m[None, None]
+
+
+def apply_attention(
+    params,
+    s: AttnSpec,
+    x: jax.Array,
+    positions: jax.Array,
+    mask: Optional[jax.Array] = None,
+    seq_parallel: bool = False,
+) -> jax.Array:
+    """Full-sequence self-attention (train / prefill).
+
+    Two distribution schemes, chosen by the caller:
+      * head-parallel (default): block input was all-gathered over seq;
+        q/k/v head-sharded over "model"; wo contraction emits a psum.
+      * seq-parallel: for archs whose head count does not divide the model
+        axis (minitron/phi4: 24 heads, gemma3: 4). q stays sequence-sharded;
+        only the (small, GQA) k/v are gathered in bf16 — for kv=8 of 24
+        heads that is 2x134MB instead of 3x805MB f32 per layer.
+    """
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(params, s, x)
+    q, k = _rope_qk(s, q, k, positions)
+    if seq_parallel:
+        q = shard_act(q, ("batch", "act_seq", None, None))
+        k = shard_act(k, ("batch", None, None, None))
+        v = shard_act(v, ("batch", None, None, None))
+    else:
+        q = shard_act(q, ("batch", None, "heads", None))
+    if mask is None and s.causal:
+        mask = causal_mask(S, S, s.window)
+    out = _sdpa(q, k, v, mask, s.n_heads // s.kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_attn_cache(s: AttnSpec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """KV cache defs for decode. Sliding-window layers keep only the window
+    (ring buffer); full layers keep seq_len. Logical axes mark kv_seq for
+    context-parallel sharding."""
+    T = min(seq_len, s.window) if s.window is not None else seq_len
+    return {
+        "k": ParamDef((batch, T, s.kv_heads, s.head_dim), ("batch", "kv_seq", "kv_heads", None), init="zeros", dtype=dtype),
+        "v": ParamDef((batch, T, s.kv_heads, s.head_dim), ("batch", "kv_seq", "kv_heads", None), init="zeros", dtype=dtype),
+    }
+
+
+def decode_attention(
+    params,
+    s: AttnSpec,
+    x: jax.Array,            # (B, 1, D) the new token
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,          # () current position (number of tokens already cached)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    q, k_new, v_new = _proj_qkv(params, s, x)
+    if s.rope == "mrope":
+        # text-token decode: all three position components advance together
+        positions = jnp.full((3, B, 1), pos, jnp.int32)
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new = _rope_qk(s, q, k_new, positions)
+    T = cache["k"].shape[1]
+    slot = pos % T if s.window is not None else pos  # ring buffer for windows
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    kj = jnp.arange(T)
+    if s.window is not None:
+        # ring buffer: every slot is valid once the buffer has wrapped
+        valid = jnp.where(pos + 1 >= T, jnp.ones((T,), bool), kj <= slot)
+    else:
+        valid = kj <= pos
+    mask = valid.reshape(1, 1, 1, T)
+    out = _sdpa(q, k, v, mask, s.n_heads // s.kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    rope_theta: float = 10000.0
+
+
+def init_mla(s: MLASpec) -> Dict[str, Any]:
+    d, h = s.d_model, s.n_heads
+    return {
+        "wq": ParamDef((d, h, s.qk_nope + s.qk_rope), ("embed", "heads", None)),
+        "wdkv": ParamDef((d, s.kv_lora), ("embed", None)),
+        "wk_rope": ParamDef((d, s.qk_rope), ("embed", None)),
+        "kv_norm": init_rmsnorm(s.kv_lora),
+        "wuk": ParamDef((s.kv_lora, h, s.qk_nope), (None, "heads", None)),
+        "wuv": ParamDef((s.kv_lora, h, s.v_head), (None, "heads", None)),
+        "wo": ParamDef((h, s.v_head, d), ("heads", None, "embed")),
+    }
+
+
+def apply_mla(params, s: MLASpec, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Training / prefill MLA."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., : s.qk_nope], q[..., s.qk_nope :]
+    q_rope = apply_rope(q_rope, positions, s.rope_theta)
+    latent = rms_norm(params["kv_norm"], jnp.einsum("bsd,dl->bsl", x, params["wdkv"]))
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, params["wk_rope"])[:, :, None, :], positions, s.rope_theta
+    )  # (B,S,1,rope) shared across heads
+    k_nope = jnp.einsum("bsl,lhk->bshk", latent, params["wuk"])
+    val = jnp.einsum("bsl,lhk->bshk", latent, params["wuv"])
+    scale = 1.0 / np.sqrt(s.qk_nope + s.qk_rope)
+    logits = (
+        jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        + jnp.einsum("bshk,bthk->bhst", q_rope, jnp.broadcast_to(k_rope, q_rope.shape[:1] + (S,) + q_rope.shape[2:]))
+    ).astype(jnp.float32) * scale
+    mask = causal_mask(S, S)
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, val)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_mla_cache(s: MLASpec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    return {
+        "latent": ParamDef((batch, seq_len, s.kv_lora), ("batch", "kv_seq", None), init="zeros", dtype=dtype),
+        "k_rope": ParamDef((batch, seq_len, s.qk_rope), ("batch", "kv_seq", None), init="zeros", dtype=dtype),
+    }
+
+
+def decode_mla(params, s: MLASpec, x, cache, pos):
+    """Absorbed-form MLA decode: score against the latent cache directly —
+    per-step cost O(S * (kv_lora + qk_rope) * H) instead of re-expanding K/V."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])  # (B,1,H,nope+rope)
+    q_nope, q_rope = q[..., : s.qk_nope], q[..., s.qk_nope :]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, positions, s.rope_theta)
+    latent_new = rms_norm(params["kv_norm"], jnp.einsum("bsd,dl->bsl", x, params["wdkv"]))
+    k_rope_new = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, params["wk_rope"])[:, :, None, :], positions, s.rope_theta
+    )[:, :, 0, :]
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), pos, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    # absorb: q' = q_nope @ wuk  -> latent space
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["wuk"])  # (B,1,H,L)
+    T = latent.shape[1]
+    scale = 1.0 / np.sqrt(s.qk_nope + s.qk_rope)
+    logits = (
+        jnp.einsum("bshl,btl->bhst", q_lat, latent)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = (jnp.arange(T)[None, :] <= pos).reshape(1, 1, 1, T)
+    logits = jnp.where(valid, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", probs, latent)  # (B,1,H,L)
+    out = jnp.einsum("bshl,lhk->bshk", o_lat, params["wuv"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"  # silu (SwiGLU) | gelu (GeGLU) | relu2
+    gated: bool = True        # False = plain 2-matrix MLP (e.g. Nemotron relu2)
+
+
+def init_mlp(s: MLPSpec) -> Dict[str, Any]:
+    defs = {
+        "wu": ParamDef((s.d_model, s.d_ff), ("embed", "ffn")),
+        "wd": ParamDef((s.d_ff, s.d_model), ("ffn", "embed")),
+    }
+    if s.gated:
+        defs["wg"] = ParamDef((s.d_model, s.d_ff), ("embed", "ffn"))
+    return defs
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def apply_mlp(params, s: MLPSpec, x: jax.Array) -> jax.Array:
+    if s.gated:
+        g = _act(s.activation, jnp.einsum("bsd,df->bsf", x, params["wg"]))
+        u = jnp.einsum("bsd,df->bsf", x, params["wu"])
+        h = g * u
+    else:
+        h = _act(s.activation, jnp.einsum("bsd,df->bsf", x, params["wu"]))
+    h = shard_act(h, ("batch", None, "ffn"))
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"])
+
+
+# ---------------------------------------------------------------------------
+# MoE with sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_expert: int
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    d_shared: int = 0                 # shared-expert hidden size (total)
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    renorm: bool = True
+    # dispatch groups: routing/capacity are computed PER GROUP so every
+    # token-space tensor keeps a leading group dim shardable over the DP
+    # axes; without this the sort/scatter tensors get replicated per device
+    # (observed 224 GB/device in the dry-run). 32 = lcm of the dp extents.
+    groups: int = 32
+
+
+def init_moe(s: MoESpec) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "router": ParamDef((s.d_model, s.num_experts), ("embed", "experts"), scale=0.1),
+        "wg": ParamDef((s.num_experts, s.d_model, s.d_expert), ("experts", "embed", "expert_ffn")),
+        "wu": ParamDef((s.num_experts, s.d_model, s.d_expert), ("experts", "embed", "expert_ffn")),
+        "wd": ParamDef((s.num_experts, s.d_expert, s.d_model), ("experts", "expert_ffn", "embed")),
+    }
+    if s.num_shared > 0:
+        defs["shared"] = init_mlp(MLPSpec(s.d_model, s.d_shared, s.activation))
+    return defs
+
+
+def apply_moe(params, s: MoESpec, x: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Routed MoE. Under a mesh context the routed path runs inside an
+    explicit shard_map (per-device dispatch + expert-parallel slicing + one
+    psum) — GSPMD was observed to replicate the token-space gathers of the
+    einsum formulation across all 256 devices (~50 GB/device); the shard_map
+    schedule pins every tensor's placement. Without a mesh (CPU smoke tests)
+    the pure-jnp grouped reference path below runs instead, and the two are
+    allclose-tested against each other."""
+    from repro.models.sharding_hooks import _CTX
+
+    ctx = _CTX.get()
+    if ctx is not None:
+        return _apply_moe_shardmap(params, s, x, ctx)
+    return _apply_moe_reference(params, s, x)
+
+
+def _apply_moe_reference(params, s: MoESpec, x: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, D = x.shape
+    T = B * S
+    E, K = s.num_experts, s.top_k
+    G = s.groups if (s.groups > 0 and T % s.groups == 0 and T >= s.groups * max(E // K, 1)) else 1
+    Tg = T // G
+    C = int(np.ceil(Tg * K / E * s.capacity_factor))
+    xg = x.reshape(G, Tg, D)
+    xg = shard_act(xg, ("batch", None, "embed"))
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(gates, K)  # (G,Tg,K)
+    if s.renorm:
+        top_v = top_v / jnp.maximum(jnp.sum(top_v, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e (global over all groups)
+    me = jnp.mean(gates, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=2), axis=(0, 1)) / K
+    lb_loss = E * jnp.sum(me * ce)
+
+    # ---- group-local sort-based dispatch ---------------------------------
+    # dispatch = PERMUTATION (scatter-set into capacity slots; never add, so
+    # no f32 upcast); combine = gather + weighted sum over the K choices.
+    TK = Tg * K
+    flat_e = top_i.reshape(G, TK)                               # expert ids
+    flat_t = jnp.broadcast_to(jnp.arange(Tg)[None, :, None], (G, Tg, K)).reshape(G, TK)
+    order = jnp.argsort(flat_e, axis=1)                         # stable per group
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    seg_start = jax.vmap(lambda a: jnp.searchsorted(a, jnp.arange(E), side="left"))(se)  # (G,E)
+    pos = jnp.arange(TK)[None, :] - jnp.take_along_axis(seg_start, se, axis=1)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                             # parking slot C
+
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None], (G, TK))
+    contrib = jnp.take_along_axis(xg, st[..., None], axis=1)    # (G,TK,D) bf16
+    contrib = shard_act(contrib, ("batch", None, "embed"))
+    buf = jnp.zeros((G, E, C + 1, D), x.dtype).at[gi, se, pos_c].set(contrib)
+    buf = shard_act(buf[:, :, :C], ("batch", "experts", None, "embed"))
+
+    g = _act(s.activation, jnp.einsum("gecd,edf->gecf", buf, params["wg"]))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["wu"])
+    h = jnp.einsum("gecf,efd->gecd", g * u, params["wd"])
+    h = shard_act(h, ("batch", "experts", None, "embed"))
+
+    # slot of token t's k-th choice, in (G,Tg,K) layout (C = dropped)
+    inv_pos = jnp.zeros((G, TK), jnp.int32).at[gi, order].set(pos_c).reshape(G, Tg, K)
+    hpad = jnp.pad(h, ((0, 0), (0, 0), (0, 1), (0, 0)))          # parking slot reads 0
+    picked = hpad[
+        jnp.arange(G)[:, None, None],
+        top_i,                                                    # (G,Tg,K)
+        inv_pos,
+    ]                                                             # (G,Tg,K,D)
+    picked = shard_act(picked, ("batch", None, None, "embed"))
+    out = jnp.einsum("gtkd,gtk->gtd", picked, top_v.astype(x.dtype))
+    y = out.reshape(B, S, D)
+    if s.num_shared > 0:
+        y = y + apply_mlp(params["shared"], MLPSpec(s.d_model, s.d_shared, s.activation), x)
+    return y, {"lb_loss": lb_loss}
+
+
+def _apply_moe_shardmap(params, s: MoESpec, x: jax.Array, ctx) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Explicit schedule: every rank dispatches ITS tokens to capacity slots
+    of the experts IT owns (expert-parallel mode) or of all experts with the
+    ffn dim sharded (tensor-parallel mode); one psum over "model" merges the
+    partial combines. Per-device capacity C = ceil(T_local*K/E*cf)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, rules = ctx
+    dp = rules.get("batch")
+    dp_axes = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    expert_parallel = rules.get("experts") == "model" and s.num_experts % (mesh.shape.get("model", 1)) == 0
+    ffn_parallel = (not expert_parallel) and rules.get("expert_ffn") == "model" and s.d_expert % mesh.shape.get("model", 1) == 0
+
+    B, S, D = x.shape
+    E, K = s.num_experts, s.top_k
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    if B % dp_size != 0:
+        dp_axes, dp_size = (), 1
+    T_loc = (B // dp_size) * S
+    mp = mesh.shape.get("model", 1) if (expert_parallel or ffn_parallel) else 1
+    E_loc = E // mp if expert_parallel else E
+    C = int(np.ceil(T_loc * K / E * s.capacity_factor))
+
+    def routed(xb, router, wg, wu, wd):
+        # xb: (B_loc, S, D); wg/wu/wd expert weights, already locally sliced
+        # by shard_map: expert-parallel -> (E_loc, D, F); ffn -> (E, D, F_loc)
+        xf = xb.reshape(T_loc, D)
+        logits = jnp.einsum("td,de->te", xf, router).astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_v, top_i = jax.lax.top_k(gates, K)
+        if s.renorm:
+            top_v = top_v / jnp.maximum(jnp.sum(top_v, axis=-1, keepdims=True), 1e-9)
+        # load balance (local estimate; pmean over dp below)
+        me = jnp.mean(gates, axis=0)
+        ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=1), axis=0) / K
+        lb = E * jnp.sum(me * ce)
+        if dp_axes:
+            lb = jax.lax.pmean(lb, dp_axes)
+
+        flat_e = top_i.reshape(-1)                      # (T_loc*K,)
+        flat_t = jnp.broadcast_to(jnp.arange(T_loc)[:, None], (T_loc, K)).reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st = flat_e[order], flat_t[order]
+        seg = jnp.searchsorted(se, jnp.arange(E), side="left")
+        pos = jnp.arange(T_loc * K) - seg[se]
+        keep = pos < C
+        if expert_parallel and model_ax is not None:
+            r = jax.lax.axis_index(model_ax)
+            local_e = se - r * E_loc
+            mine = (local_e >= 0) & (local_e < E_loc) & keep
+            le = jnp.where(mine, local_e, 0)
+        else:
+            mine = keep
+            le = se
+        pos_c = jnp.where(mine, pos, C)                  # parking slot
+        contrib = xf[st]                                  # (T_loc*K, D)
+        buf = jnp.zeros((E_loc, C + 1, D), xb.dtype).at[le, pos_c].set(contrib)
+        buf = buf[:, :C]
+
+        g = _act(s.activation, jnp.einsum("ecd,edf->ecf", buf, wg))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        h = jnp.einsum("ecf,efd->ecd", g * u, wd)        # (E_loc, C, D)
+
+        # combine: gather my experts' outputs back to token order; foreign
+        # experts / dropped tokens read the zero parking slot; psum merges.
+        hpad = jnp.pad(h, ((0, 0), (0, 1), (0, 0)))
+        vals = hpad[le, pos_c]                            # (T_loc*K, D)
+        sv = top_v.reshape(-1)[order]
+        vals = vals * jnp.where(mine, sv, 0.0)[:, None].astype(xb.dtype)
+        out = jnp.zeros((T_loc, D), jnp.float32).at[st].add(vals.astype(jnp.float32))
+        if model_ax is not None and (expert_parallel or ffn_parallel):
+            out = jax.lax.psum(out, model_ax)
+        return out.reshape(xb.shape).astype(xb.dtype), lb
+
+    dpP = dp if dp_axes else None
+    if expert_parallel:
+        w_spec = P("model", None, None)
+        wd_spec = P("model", None, None)
+    elif ffn_parallel:
+        w_spec = P(None, None, "model")
+        wd_spec = P(None, "model", None)
+    else:
+        w_spec = P(None, None, None)
+        wd_spec = P(None, None, None)
+
+    routed_sm = shard_map(
+        routed,
+        mesh=mesh,
+        in_specs=(P(dpP, None, None), P(None, None), w_spec, w_spec, wd_spec),
+        out_specs=(P(dpP, None, None), P()),
+        check_vma=False,
+    )
+    y, lb_loss = routed_sm(x, params["router"], params["wg"], params["wu"], params["wd"])
+    if s.num_shared > 0:
+        y = y + apply_mlp(params["shared"], MLPSpec(s.d_model, s.d_shared, s.activation), x)
+    return y, {"lb_loss": lb_loss}
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(vocab: int, d_model: int) -> Dict[str, Any]:
+    return {"table": ParamDef((vocab, d_model), ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table^T (fp32)."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), params["table"].astype(jnp.float32))

@@ -1,0 +1,85 @@
+"""Parameter-definition system: shapes + logical sharding axes + init, in one
+declaration. Every model builds a nested dict of ``ParamDef``; from it we get
+  * init_tree(defs, key)  -> params pytree (concrete arrays)
+  * axes_tree(defs)       -> matching pytree of logical-axis tuples
+  * shape_tree(defs)      -> matching pytree of jax.ShapeDtypeStruct
+The axes tuples feed core/sharded.py's logical→mesh mapping (IPLS partition
+plane); the shape tree feeds the allocation-free dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed | small
+    scale: float = 1.0           # multiplier on the default fan-in scale
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_leaf(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        std = d.scale
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+    # fan-in scaled normal (truncation unnecessary for smoke scale)
+    fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+    if len(d.shape) >= 3:
+        fan_in = int(np.prod(d.shape[:-1])) // d.shape[-1] if d.init == "small" else d.shape[0]
+    std = d.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_tree(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def shape_tree(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Stack a period's defs n times along a new leading 'layers' axis
+    (the lax.scan parameter layout)."""
+
+    def leaf(d: ParamDef) -> ParamDef:
+        return ParamDef(
+            shape=(n,) + d.shape,
+            axes=(axis_name,) + d.axes,
+            init=d.init,
+            scale=d.scale,
+            dtype=d.dtype,
+        )
+
+    return jax.tree.map(leaf, defs, is_leaf=_is_def)
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))

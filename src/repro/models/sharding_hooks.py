@@ -1,0 +1,48 @@
+"""Activation-sharding hook.
+
+Models call ``shard_act(x, ("batch", "act_seq", "embed"))`` at block
+boundaries. Outside a mesh context this is the identity (CPU smoke tests);
+inside the launcher's context it applies with_sharding_constraint using the
+same logical→mesh rules as the parameter plane — this is how sequence
+parallelism and context-parallel KV sharding are expressed.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sharded import DEFAULT_RULES, spec_for_leaf
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Optional[dict] = None):
+    merged = dict(DEFAULT_RULES, **(rules or {}))
+    token = _CTX.set((mesh, merged))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def shard_act(x: jax.Array, names: tuple) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for_leaf(tuple(names), tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def act_mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis in the active sharding context (1 if none)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1

@@ -1,0 +1,415 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both provide a chunked parallel form for training/prefill (O(T·Q) with chunk
+size Q, MXU-friendly intra-chunk matmuls + a short lax.scan over chunks) and a
+recurrent form for decode (state carried in the cache). These are the
+sub-quadratic paths that make the ``long_500k`` shape runnable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param_defs import ParamDef
+from repro.models.layers import init_rmsnorm, rms_norm, init_mlp, MLPSpec, apply_mlp
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state-space duality chunked algorithm, arXiv:2405.21060)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(s: Mamba2Spec) -> Dict[str, Any]:
+    di, ns, nh = s.d_inner, s.d_state, s.n_heads
+    conv_dim = di + 2 * ns
+    return {
+        # order: [x (di), B (ns), C (ns), z (di), dt (nh)]
+        "w_in": ParamDef((s.d_model, 2 * di + 2 * ns + nh), ("embed", "ffn")),
+        "conv_w": ParamDef((s.d_conv, conv_dim), ("conv", None), scale=0.5),
+        "conv_b": ParamDef((conv_dim,), (None,), init="zeros"),
+        "A_log": ParamDef((nh,), (None,), init="zeros"),
+        "D": ParamDef((nh,), (None,), init="ones"),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "norm": init_rmsnorm(di),
+        "w_out": ParamDef((di, s.d_model), ("ffn", "embed")),
+    }
+
+
+def _split_inproj(s: Mamba2Spec, zxbcdt: jax.Array):
+    di, ns, nh = s.d_inner, s.d_state, s.n_heads
+    x = zxbcdt[..., :di]
+    Bm = zxbcdt[..., di : di + ns]
+    Cm = zxbcdt[..., di + ns : di + 2 * ns]
+    z = zxbcdt[..., di + 2 * ns : 2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns :]
+    return x, Bm, Cm, z, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. xBC: (B,T,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD chunked scan.
+
+    xh: (B,T,H,P) inputs; dt: (B,T,H) positive step sizes; A: (H,) negative
+    decay rates; Bm/Cm: (B,T,N) input/output projections (single group).
+    Returns (y: (B,T,H,P), final_state: (B,H,N,P)).
+    """
+    Bsz, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    if T % Q:
+        # pad with dt=0 steps: decay 1, contribution 0 — state unaffected
+        padn = Q - T % Q
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, padn)) + ((0, 0),) * (a.ndim - 2))
+        y, final = ssd_chunked(pad(xh), pad(dt), A, pad(Bm), pad(Cm), chunk, init_state)
+        return y[:, :T], final
+    nc = T // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A  # (B,nc,Q,H) negative
+    g = jnp.cumsum(dA, axis=2)  # cumulative log-decay within chunk
+    # intra-chunk (quadratic within Q): att[i,j] = C_i·B_j * exp(g_i - g_j) * dt_j
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,nc,Q,Q)
+    # clamp at 0: entries with j > i are masked below, but exp overflow there
+    # would still poison the BACKWARD pass (inf * 0 = nan in the vjp)
+    decay = jnp.exp(jnp.minimum(g[:, :, :, None, :] - g[:, :, None, :, :], 0.0))
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    att = CB[..., None] * jnp.where(causal, decay, 0.0) * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(xh.dtype), xc)
+
+    # chunk summary states: S_c = sum_j exp(g_last - g_j) dt_j B_j x_j^T
+    last = g[:, :, -1:, :]  # (B,nc,1,H)
+    w_j = jnp.exp(last - g) * dtc  # (B,nc,Q,H)
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w_j.astype(xh.dtype), Bc, xc)  # (B,nc,H,N,P)
+
+    # inter-chunk recurrence over the nc chunk states
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+    def body(carry, inp):
+        S_c, dec, S_new = inp
+        out = carry  # state BEFORE this chunk
+        nxt = out * dec[..., None, None] + S_new
+        return nxt, out
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), xh.dtype)
+    S_seq = jnp.moveaxis(S, 1, 0)  # (nc,B,H,N,P)
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+
+    def scan_body(carry, inp):
+        S_new, dec = inp
+        prev = carry
+        nxt = prev * dec[..., None, None].astype(xh.dtype) + S_new
+        return nxt, prev
+
+    final, prevs = jax.lax.scan(scan_body, init_state, (S_seq, dec_seq))
+    S_prev = jnp.moveaxis(prevs, 0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # contribution of carried state: y_i += exp(g_i) C_i · S_prev
+    y_inter = jnp.einsum(
+        "bcih,bcin,bchnp->bcihp", jnp.exp(g).astype(xh.dtype), Cc, S_prev
+    )
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, final
+
+
+def apply_mamba2(
+    params, s: Mamba2Spec, x: jax.Array, init_state=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Training / prefill. x: (B,T,D) -> (y, final_ssm_state)."""
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["w_in"])
+    xi, Bm, Cm, z, dt = _split_inproj(s, zxbcdt)
+    xBC = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xi, Bm, Cm = (
+        xBC[..., : s.d_inner],
+        xBC[..., s.d_inner : s.d_inner + s.d_state],
+        xBC[..., s.d_inner + s.d_state :],
+    )
+    H, P = s.n_heads, s.head_dim
+    xh = xi.reshape(*xi.shape[:2], H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, init_state)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], s.d_inner)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    return jnp.einsum("bte,ed->btd", y, params["w_out"]), final
+
+
+def init_mamba2_cache(s: Mamba2Spec, batch: int, dtype=jnp.bfloat16):
+    conv_dim = s.d_inner + 2 * s.d_state
+    return {
+        "conv": ParamDef((batch, s.d_conv - 1, conv_dim), ("batch", None, None), init="zeros", dtype=dtype),
+        "ssm": ParamDef(
+            (batch, s.n_heads, s.d_state, s.head_dim), ("batch", "heads", None, None), init="zeros", dtype=jnp.float32
+        ),
+    }
+
+
+def decode_mamba2(params, s: Mamba2Spec, x, cache, pos):
+    """One-token recurrent step. x: (B,1,D)."""
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["w_in"])
+    xi, Bm, Cm, z, dt = _split_inproj(s, zxbcdt)
+    xBC_new = jnp.concatenate([xi, Bm, Cm], axis=-1)  # (B,1,conv_dim)
+    hist = jnp.concatenate([cache["conv"], xBC_new.astype(cache["conv"].dtype)], axis=1)
+    # causal depthwise conv over the last d_conv inputs
+    w = params["conv_w"]
+    conv_out = sum(hist[:, i, :] * w[i] for i in range(s.d_conv)) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+    xi = xBC[..., : s.d_inner]
+    Bm = xBC[..., s.d_inner : s.d_inner + s.d_state]
+    Cm = xBC[..., s.d_inner + s.d_state :]
+    H, P = s.n_heads, s.head_dim
+    xh = xi.reshape(x.shape[0], H, P)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt1 * A)  # (B,H)
+    S = cache["ssm"]
+    S = S * dA[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bm[:, 0].astype(jnp.float32), xh.astype(jnp.float32), dt1
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S).astype(x.dtype)
+    y = y + params["D"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, s.d_inner)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    return out, {"conv": new_conv, "ssm": S}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch", arXiv:2404.05892) — data-dependent per-channel decay
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Spec:
+    d_model: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv6_time(s: RWKV6Spec) -> Dict[str, Any]:
+    d = s.d_model
+    return {
+        # token-shift interpolation weights (static mu; the full 5-way lora of
+        # Finch is approximated with per-stream static mixes + the decay lora,
+        # which is the data-dependent part that defines RWKV6)
+        "mu_r": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "mu_k": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "mu_v": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "mu_w": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "mu_g": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x w1) w2))
+        "w0": ParamDef((d,), (None,), init="zeros"),
+        "w1": ParamDef((d, s.decay_lora), ("embed", None), scale=0.1),
+        "w2": ParamDef((s.decay_lora, d), (None, "heads"), scale=0.1),
+        "u": ParamDef((d,), (None,), init="zeros"),  # bonus for current token
+        "ln_out": init_rmsnorm(d),
+        "wo": ParamDef((d, d), ("heads", "embed")),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array] = None) -> jax.Array:
+    """Previous-token stream; x_prev is the final token of the previous
+    segment (decode) or zeros (training start)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu  # lerp toward the shifted stream
+
+
+def rwkv6_chunked(r, k, v, logw, u, chunk: int, init_state=None):
+    """Chunked RWKV6/GLA recurrence, scanned chunk-by-chunk.
+
+    r,k,v: (B,T,H,K); logw: (B,T,H,K) negative log-decays (log w_t);
+    u: (H,K) bonus for the current token. State S: (B,H,K,V). Convention:
+        out_t = r_t·S_{t-1} + r_t·(u ⊙ k_t) v_t
+        S_t   = diag(w_t)·S_{t-1} + k_t v_t^T
+    The per-channel data-dependent decay makes the intra-chunk pair weights a
+    (Q,Q,H,K) tensor; we keep it exact and bound memory by lax.scan over
+    chunks (one chunk's pair tensor live at a time). This is the XLA
+    reference path; the fused Pallas kernel (kernels/linear_scan) computes
+    the same quantity tile-by-tile in VMEM.
+    """
+    B, T, H, K = r.shape
+    Q = min(chunk, T)
+    if T % Q:
+        # pad with logw=0 (decay 1), k=v=0 — state unaffected
+        padn = Q - T % Q
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, padn)) + ((0, 0),) * (a.ndim - 2))
+        y, final = rwkv6_chunked(pad(r), pad(k), pad(v), pad(logw), u, chunk, init_state)
+        return y[:, :T], final
+    nc = T // Q
+    V = v.shape[-1]
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, nc, Q, H, -1), 1, 0)  # (nc,B,Q,H,·)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)
+    lw = to_chunks(logw.astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+
+    ii = jnp.arange(Q)
+    strictly = (ii[:, None] > ii[None, :])[:, :, None, None]  # (Q,Q,1,1)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def body(S, inp):
+        rq, kq, vq, lwq = inp  # (B,Q,H,·)
+        rq32, kq32, vq32 = rq.astype(jnp.float32), kq.astype(jnp.float32), vq.astype(jnp.float32)
+        L = jnp.cumsum(lwq, axis=1)        # inclusive
+        Lx = L - lwq                        # exclusive
+        # intra-chunk pairwise decay (exact, bounded: diff <= 0 for j < i);
+        # clamp so masked (j >= i) entries can't inf-poison the backward
+        diff = jnp.minimum(Lx[:, :, None] - L[:, None, :], 0.0)  # (B,Q,Q,H,K)
+        w_pair = jnp.where(strictly[None], jnp.exp(diff), 0.0)
+        att = jnp.einsum("bihk,bijhk,bjhk->bhij", rq32, w_pair, kq32)
+        y = jnp.einsum("bhij,bjhv->bihv", att, vq32)
+        # bonus diagonal
+        bon = jnp.einsum("bihk,hk,bihk->bih", rq32, u32, kq32)
+        y = y + bon[..., None] * vq32
+        # inter-chunk: carried state
+        y = y + jnp.einsum("bihk,bhkv->bihv", rq32 * jnp.exp(Lx), S)
+        # state update
+        last = L[:, -1:, :, :]                          # (B,1,H,K)
+        S_new = S * jnp.exp(last[:, 0])[..., None] + jnp.einsum(
+            "bjhk,bjhv->bhkv", kq32 * jnp.exp(last - L), vq32
+        )
+        return S_new, y
+
+    final, ys = jax.lax.scan(body, init_state, (rc, kc, vc, lw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, V)
+    return y, final
+
+
+def apply_rwkv6_time(params, s: RWKV6Spec, x: jax.Array, init_state=None, x_prev=None):
+    B, T, D = x.shape
+    H, K = s.n_heads, s.head_dim
+    xs = _token_shift(x, x_prev)
+    xr = _mix(x, xs, params["mu_r"].astype(x.dtype))
+    xk = _mix(x, xs, params["mu_k"].astype(x.dtype))
+    xv = _mix(x, xs, params["mu_v"].astype(x.dtype))
+    xw = _mix(x, xs, params["mu_w"].astype(x.dtype))
+    xg = _mix(x, xs, params["mu_g"].astype(x.dtype))
+    r = jnp.einsum("btd,de->bte", xr, params["wr"]).reshape(B, T, H, K)
+    k = jnp.einsum("btd,de->bte", xk, params["wk"]).reshape(B, T, H, K)
+    v = jnp.einsum("btd,de->bte", xv, params["wv"]).reshape(B, T, H, K)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, params["wg"]))
+    # data-dependent decay (the defining RWKV6 feature)
+    dd = jnp.einsum(
+        "btl,le->bte", jnp.tanh(jnp.einsum("btd,dl->btl", xw, params["w1"])), params["w2"]
+    )
+    logw = -jnp.exp(
+        jnp.clip(params["w0"].astype(jnp.float32) + dd.astype(jnp.float32), -8.0, 4.0)
+    ).reshape(B, T, H, K)
+    u = params["u"].astype(jnp.float32).reshape(H, K)
+    y, final = rwkv6_chunked(r, k, v, logw, u, s.chunk, init_state)
+    y = y.reshape(B, T, D).astype(x.dtype) * g
+    y = rms_norm(params["ln_out"], y)
+    return jnp.einsum("btd,de->btd", y, params["wo"]), final, x[:, -1:]
+
+
+def init_rwkv6_cache(s: RWKV6Spec, batch: int, dtype=jnp.bfloat16):
+    return {
+        "state": ParamDef(
+            (batch, s.n_heads, s.head_dim, s.head_dim), ("batch", "heads", None, None), init="zeros", dtype=jnp.float32
+        ),
+        "x_prev": ParamDef((batch, 1, s.d_model), ("batch", None, None), init="zeros", dtype=dtype),
+        "x_prev_ffn": ParamDef((batch, 1, s.d_model), ("batch", None, None), init="zeros", dtype=dtype),
+    }
+
+
+def decode_rwkv6_time(params, s: RWKV6Spec, x, state, x_prev):
+    """One token. x: (B,1,D); state: (B,H,K,V); x_prev: (B,1,D)."""
+    B, _, D = x.shape
+    H, K = s.n_heads, s.head_dim
+    xs = x_prev
+    xr = _mix(x, xs, params["mu_r"].astype(x.dtype))
+    xk = _mix(x, xs, params["mu_k"].astype(x.dtype))
+    xv = _mix(x, xs, params["mu_v"].astype(x.dtype))
+    xw = _mix(x, xs, params["mu_w"].astype(x.dtype))
+    xg = _mix(x, xs, params["mu_g"].astype(x.dtype))
+    r = jnp.einsum("btd,de->bte", xr, params["wr"]).reshape(B, H, K)
+    k = jnp.einsum("btd,de->bte", xk, params["wk"]).reshape(B, H, K)
+    v = jnp.einsum("btd,de->bte", xv, params["wv"]).reshape(B, H, K)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, params["wg"]))
+    dd = jnp.einsum("btl,le->bte", jnp.tanh(jnp.einsum("btd,dl->btl", xw, params["w1"])), params["w2"])
+    w = jnp.exp(-jnp.exp(jnp.clip(params["w0"].astype(jnp.float32) + dd.astype(jnp.float32), -8.0, 4.0)))
+    w = w.reshape(B, H, K)
+    u = params["u"].astype(jnp.float32).reshape(H, K)
+    r32, k32, v32 = r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    out = jnp.einsum("bhk,bhkv->bhv", r32, state) + jnp.einsum(
+        "bhk,hk,bhk,bhv->bhv", r32, u, k32, v32
+    )
+    new_state = state * w[..., None] + jnp.einsum("bhk,bhv->bhkv", k32, v32)
+    y = out.reshape(B, 1, D).astype(x.dtype) * g
+    y = rms_norm(params["ln_out"], y)
+    return jnp.einsum("btd,de->btd", y, params["wo"]), new_state, x
+
+
+def init_rwkv6_channel(s: RWKV6Spec, d_ff: int) -> Dict[str, Any]:
+    d = s.d_model
+    return {
+        "mu_k": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "mu_r": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "wk": ParamDef((d, d_ff), ("embed", "ffn")),
+        "wv": ParamDef((d_ff, d), ("ffn", "embed")),
+        "wr": ParamDef((d, d), ("embed", None)),
+    }
+
+
+def apply_rwkv6_channel(params, x: jax.Array, x_prev=None):
+    xs = _token_shift(x, x_prev)
+    xk = _mix(x, xs, params["mu_k"].astype(x.dtype))
+    xr = _mix(x, xs, params["mu_r"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, params["wk"])))
+    kv = jnp.einsum("btf,fd->btd", k, params["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["wr"]))
+    return r * kv, x[:, -1:]

@@ -1,0 +1,520 @@
+"""Composable decoder-only LM stack covering 8 of the 10 assigned archs.
+
+A model is a sequence of GROUPS; each group is a PERIOD of heterogeneous
+sub-blocks (attn / mla / mlp / moe / mamba2 / rwkv6) repeated ``repeat``
+times via lax.scan with stacked parameters — HLO stays small (one period
+body) and compile times stay sane at 80 layers. A group may also reference a
+SHARED block (zamba2's shared attention) whose weights live outside the scan
+and are closed over as scan constants, while its per-occurrence KV cache is
+stacked like everything else.
+
+Three execution modes per block:
+    train:   x -> y                      (no cache; remat-able scan body)
+    prefill: x -> (y, cache_entry)       (builds the serving cache)
+    decode:  (x, cache_entry, pos) -> (y, new_cache_entry)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.param_defs import ParamDef, axes_tree, init_tree, shape_tree, stack_defs, count_params
+from repro.models.sharding_hooks import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str                                   # attn|mla|mlp|moe|mamba2|rwkv6_time|rwkv6_channel
+    attn: Optional[L.AttnSpec] = None
+    mla: Optional[L.MLASpec] = None
+    mlp: Optional[L.MLPSpec] = None
+    moe: Optional[L.MoESpec] = None
+    mamba: Optional[S.Mamba2Spec] = None
+    rwkv: Optional[S.RWKV6Spec] = None
+    rwkv_ffn: int = 0
+    norm: str = "rms"                            # rms | ln
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    blocks: Tuple[BlockSpec, ...]
+    repeat: int = 1
+    shared: Tuple[BlockSpec, ...] = ()           # applied after blocks, weights shared
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    vocab: int
+    d_model: int
+    groups: Tuple[GroupSpec, ...]
+    tie_embeddings: bool = False
+    embed_scale: bool = False                    # gemma: x *= sqrt(d_model)
+    final_norm: str = "rms"
+    subquadratic: bool = False                   # eligible for long_500k
+    mrope: bool = False                          # expects positions3 input
+    lb_loss_weight: float = 0.01
+    remat: bool = True
+    logit_softcap: Optional[float] = None
+    # per-arch logical->mesh rule overrides (e.g. granite expert sharding)
+    sharding_overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(g.repeat * len(g.blocks) for g in self.groups)
+
+
+# ---------------------------------------------------------------------------
+# block init / apply dispatch
+# ---------------------------------------------------------------------------
+
+
+def _sharded_ce(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token NLL that stays local under vocab sharding.
+
+    take_along_axis (gather) over a sharded vocab dim forces GSPMD to
+    all-gather the full (B,S,V) logits — measured at 333 GB/device wire on
+    minitron-4b train_4k. The masked-reduction form fuses into the softmax
+    loops and lowers to local partial reductions + an (B,S)-sized psum.
+    """
+    V = logits.shape[-1]
+    l32 = logits.astype(jnp.float32)
+    m = jnp.max(l32, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(l32 - m[..., None]), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    tgt = jnp.sum(jnp.where(vocab_iota == targets[..., None], l32, 0.0), axis=-1)
+    return lse - tgt
+
+
+def _norm_init(kind: str, d: int):
+    return L.init_rmsnorm(d) if kind == "rms" else L.init_layernorm(d)
+
+
+def _norm_apply(kind: str, p, x):
+    return L.rms_norm(p, x) if kind == "rms" else L.layer_norm(p, x)
+
+
+def block_defs(b: BlockSpec, d_model: int) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"norm": _norm_init(b.norm, d_model)}
+    if b.kind == "attn":
+        defs["attn"] = L.init_attention(b.attn)
+    elif b.kind == "mla":
+        defs["mla"] = L.init_mla(b.mla)
+    elif b.kind == "mlp":
+        defs["mlp"] = L.init_mlp(b.mlp)
+    elif b.kind == "moe":
+        defs["moe"] = L.init_moe(b.moe)
+    elif b.kind == "mamba2":
+        defs["mamba"] = S.init_mamba2(b.mamba)
+    elif b.kind == "rwkv6_time":
+        defs["rwkv"] = S.init_rwkv6_time(b.rwkv)
+    elif b.kind == "rwkv6_channel":
+        defs["rwkv_ffn"] = S.init_rwkv6_channel(b.rwkv, b.rwkv_ffn)
+    else:
+        raise ValueError(b.kind)
+    return defs
+
+
+def block_cache_defs(b: BlockSpec, batch: int, seq_len: int) -> Optional[Dict[str, Any]]:
+    if b.kind == "attn":
+        return L.init_attn_cache(b.attn, batch, seq_len)
+    if b.kind == "mla":
+        return L.init_mla_cache(b.mla, batch, seq_len)
+    if b.kind == "mamba2":
+        return S.init_mamba2_cache(b.mamba, batch)
+    if b.kind == "rwkv6_time":
+        return {
+            "state": ParamDef((batch, b.rwkv.n_heads, b.rwkv.head_dim, b.rwkv.head_dim),
+                              ("batch", "heads", None, None), init="zeros", dtype=jnp.float32),
+            "x_prev": ParamDef((batch, 1, b.rwkv.d_model), ("batch", None, None), init="zeros"),
+        }
+    if b.kind == "rwkv6_channel":
+        return {
+            "x_prev": ParamDef((batch, 1, b.rwkv.d_model), ("batch", None, None), init="zeros"),
+        }
+    return None  # mlp / moe are stateless
+
+
+def _gatherable(b: BlockSpec) -> bool:
+    """Megatron-SP full-seq gather is profitable only when the block's
+    parallel dim divides the model axis; otherwise the block's weights are
+    replicated and gathering the input would REPLICATE its compute
+    (measured: minitron's 24 heads over 16 chips -> 2.1x total flops)."""
+    from repro.models.sharding_hooks import act_mesh_axis_size
+
+    m = act_mesh_axis_size("model")
+    if m == 1:
+        return False
+    if b.kind in ("mlp",):
+        return b.mlp.d_ff % m == 0
+    if b.kind in ("moe",):
+        return True  # dispatch path is shard_mapped; shared expert ffn-sharded
+    if b.kind == "attn":
+        return b.attn.n_heads % m == 0
+    if b.kind == "mla":
+        return b.mla.n_heads % m == 0
+    if b.kind in ("mamba2", "rwkv6_time", "rwkv6_channel"):
+        return True  # recurrent over time: needs the full sequence anyway
+    return False
+
+
+def apply_block_train(b: BlockSpec, p, x, ctx) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y_residual_added, aux_scalar)."""
+    h = _norm_apply(b.norm, p["norm"], x)
+    if _gatherable(b):
+        # Megatron-SP style: ONE bf16 all-gather of the block input over the
+        # sequence axis (the residual stream is sequence-parallel between
+        # blocks); without this, GSPMD gathers q/k/v separately — measured
+        # 1.7x more wire, and in f32 when the gather sinks into rope.
+        h = shard_act(h, ("batch", None, "embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if b.kind == "attn":
+        y = L.apply_attention(
+            p["attn"], b.attn, h,
+            ctx["positions3"] if b.attn.rope == "mrope" else ctx["positions"],
+            seq_parallel=not _gatherable(b),
+        )
+    elif b.kind == "mla":
+        y = L.apply_mla(p["mla"], b.mla, h, ctx["positions"])
+    elif b.kind == "mlp":
+        y = L.apply_mlp(p["mlp"], b.mlp, h)
+    elif b.kind == "moe":
+        y, moe_aux = L.apply_moe(p["moe"], b.moe, h)
+        aux = moe_aux["lb_loss"]
+    elif b.kind == "mamba2":
+        y, _ = S.apply_mamba2(p["mamba"], b.mamba, h)
+    elif b.kind == "rwkv6_time":
+        y, _, _ = S.apply_rwkv6_time(p["rwkv"], b.rwkv, h)
+    elif b.kind == "rwkv6_channel":
+        y, _ = S.apply_rwkv6_channel(p["rwkv_ffn"], h)
+    else:
+        raise ValueError(b.kind)
+    x = x + y
+    x = shard_act(x, ("batch", "act_seq", "embed"))
+    return x, aux
+
+
+def apply_block_prefill(b: BlockSpec, p, x, ctx):
+    """Returns (y, cache_entry)."""
+    h = _norm_apply(b.norm, p["norm"], x)
+    cache = None
+    if b.kind == "attn":
+        s = b.attn
+        pos = ctx["positions3"] if s.rope == "mrope" else ctx["positions"]
+        q, k, v = L._proj_qkv(p["attn"], s, h)
+        q, k = L._rope_qk(s, q, k, pos)
+        Sq = h.shape[1]
+        mask = L.causal_mask(Sq, Sq, s.window) if s.causal else None
+        out = L._sdpa(q, k, v, mask, s.n_heads // s.kv_heads)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+        T = min(ctx["cache_len"], s.window) if s.window is not None else ctx["cache_len"]
+        kc = jnp.zeros((k.shape[0], T) + k.shape[2:], k.dtype)
+        vc = jnp.zeros_like(kc)
+        keep = min(T, Sq)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, -keep:], 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, -keep:], 0, axis=1)
+        if s.window is not None and keep == T:
+            # ring-buffer alignment: token at absolute position p lives at
+            # slot p % T, matching decode's slot = pos % T
+            shift = Sq % T
+            kc = jnp.roll(kc, shift, axis=1)
+            vc = jnp.roll(vc, shift, axis=1)
+        cache = {"k": kc, "v": vc}
+    elif b.kind == "mla":
+        s = b.mla
+        y = L.apply_mla(p["mla"], s, h, ctx["positions"])
+        latent = L.rms_norm(p["mla"]["kv_norm"], jnp.einsum("bsd,dl->bsl", h, p["mla"]["wdkv"]))
+        k_rope = L.apply_rope(
+            jnp.einsum("bsd,dk->bsk", h, p["mla"]["wk_rope"])[:, :, None, :], ctx["positions"], s.rope_theta
+        )[:, :, 0, :]
+        T = ctx["cache_len"]
+        lat = jnp.zeros((latent.shape[0], T, latent.shape[-1]), latent.dtype)
+        kr = jnp.zeros((k_rope.shape[0], T, k_rope.shape[-1]), k_rope.dtype)
+        keep = min(T, latent.shape[1])
+        lat = jax.lax.dynamic_update_slice_in_dim(lat, latent[:, -keep:], 0, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(kr, k_rope[:, -keep:], 0, axis=1)
+        cache = {"latent": lat, "k_rope": kr}
+    elif b.kind == "mlp":
+        y = L.apply_mlp(p["mlp"], b.mlp, h)
+    elif b.kind == "moe":
+        y, _ = L.apply_moe(p["moe"], b.moe, h)
+    elif b.kind == "mamba2":
+        y, final = S.apply_mamba2(p["mamba"], b.mamba, h)
+        # conv tail: the last (d_conv-1) pre-conv inputs
+        zxbcdt = jnp.einsum("btd,de->bte", h, p["mamba"]["w_in"])
+        xi, Bm, Cm, _, _ = S._split_inproj(b.mamba, zxbcdt)
+        xBC = jnp.concatenate([xi, Bm, Cm], axis=-1)
+        cache = {"conv": xBC[:, -(b.mamba.d_conv - 1) :, :], "ssm": final.astype(jnp.float32)}
+        y = y  # already projected
+    elif b.kind == "rwkv6_time":
+        y, final, x_last = S.apply_rwkv6_time(p["rwkv"], b.rwkv, h)
+        cache = {"state": final, "x_prev": x_last}
+    elif b.kind == "rwkv6_channel":
+        y, x_last = S.apply_rwkv6_channel(p["rwkv_ffn"], h)
+        cache = {"x_prev": x_last}
+    else:
+        raise ValueError(b.kind)
+    return x + y, cache
+
+
+def apply_block_decode(b: BlockSpec, p, x, cache, pos, ctx):
+    h = _norm_apply(b.norm, p["norm"], x)
+    if b.kind == "attn":
+        y, new_cache = L.decode_attention(p["attn"], b.attn, h, cache, pos)
+    elif b.kind == "mla":
+        y, new_cache = L.decode_mla(p["mla"], b.mla, h, cache, pos)
+    elif b.kind == "mlp":
+        return x + L.apply_mlp(p["mlp"], b.mlp, h), cache
+    elif b.kind == "moe":
+        y, _ = L.apply_moe(p["moe"], b.moe, h)
+        return x + y, cache
+    elif b.kind == "mamba2":
+        y, new_cache = S.decode_mamba2(p["mamba"], b.mamba, h, cache, pos)
+    elif b.kind == "rwkv6_time":
+        y, new_state, x_last = S.decode_rwkv6_time(p["rwkv"], b.rwkv, h, cache["state"], cache["x_prev"])
+        new_cache = {"state": new_state, "x_prev": x_last.astype(cache["x_prev"].dtype)}
+    elif b.kind == "rwkv6_channel":
+        y, x_last = S.apply_rwkv6_channel(p["rwkv_ffn"], h, cache["x_prev"])
+        new_cache = {"x_prev": x_last.astype(cache["x_prev"].dtype)}
+    else:
+        raise ValueError(b.kind)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- parameter plane ----------------------------------------------------
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {"embed": L.init_embedding(cfg.vocab, cfg.d_model)}
+        for gi, g in enumerate(cfg.groups):
+            period = {f"b{bi}": block_defs(b, cfg.d_model) for bi, b in enumerate(g.blocks)}
+            defs[f"g{gi}"] = stack_defs(period, g.repeat)
+            if g.shared:
+                defs[f"g{gi}_shared"] = {
+                    f"b{bi}": block_defs(b, cfg.d_model) for bi, b in enumerate(g.shared)
+                }
+        defs["final_norm"] = _norm_init(cfg.final_norm, cfg.d_model)
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = {
+                "table": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed", scale=0.02)
+            }
+        return defs
+
+    def init(self, seed: int = 0):
+        return init_tree(self.param_defs(), jax.random.PRNGKey(seed))
+
+    def axes(self):
+        return axes_tree(self.param_defs())
+
+    def param_shapes(self):
+        return shape_tree(self.param_defs())
+
+    def num_params(self) -> int:
+        return count_params(jax.tree.leaves(self.param_shapes()))
+
+    # active (per-token) params, for MODEL_FLOPS = 6 * N_active * D.
+    # MoE experts count as top_k/num_experts of their weights; shared blocks
+    # count once per application (i.e. ``repeat`` times); embedding/unembed
+    # excluded (gather, not matmul) but the LM head matmul included.
+    def num_active_params(self) -> int:
+        from repro.models.param_defs import count_params as _cp
+
+        def block_active(b: BlockSpec) -> int:
+            defs = block_defs(b, self.cfg.d_model)
+            n = _cp(shape_tree(defs))
+            if b.kind == "moe":
+                expert_n = _cp(shape_tree({k: defs["moe"][k] for k in ("wg", "wu", "wd")}))
+                n = n - expert_n + expert_n * b.moe.top_k // b.moe.num_experts
+            return n
+
+        total = 0
+        for g in self.cfg.groups:
+            per_period = sum(block_active(b) for b in g.blocks)
+            per_period += sum(block_active(b) for b in g.shared)
+            total += per_period * g.repeat
+        total += self.cfg.vocab * self.cfg.d_model  # unembed matmul
+        return total
+
+    # -- context --------------------------------------------------------------
+    def _ctx(self, batch: Dict[str, jax.Array], cache_len: int = 0) -> Dict[str, Any]:
+        tokens = batch["tokens"]
+        B, Sq = tokens.shape[0], tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+        ctx = {"positions": positions, "cache_len": cache_len}
+        if self.cfg.mrope:
+            p3 = batch.get("positions3")
+            if p3 is None:
+                p3 = jnp.broadcast_to(positions[None], (3, B, Sq))
+            ctx["positions3"] = p3
+        return ctx
+
+    # -- forward (training) ---------------------------------------------------
+    def _stack_apply_train(self, params, x, ctx):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        for gi, g in enumerate(cfg.groups):
+            gp = params[f"g{gi}"]
+            shared_p = params.get(f"g{gi}_shared")
+
+            def body(carry, p_slice, g=g, shared_p=shared_p):
+                x, aux = carry
+                for bi, b in enumerate(g.blocks):
+                    x, a = apply_block_train(b, p_slice[f"b{bi}"], x, ctx)
+                    aux = aux + a
+                for bi, b in enumerate(g.shared):
+                    x, a = apply_block_train(b, shared_p[f"b{bi}"], x, ctx)
+                    aux = aux + a
+                return (x, aux), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), gp)
+        return x, aux_total
+
+    def _embed_in(self, params, tokens):
+        x = L.embed(params["embed"], tokens)
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(self.cfg.d_model), x.dtype)
+        return shard_act(x, ("batch", "act_seq", "embed"))
+
+    def _logits(self, params, x):
+        """bf16 logits with f32 MXU accumulation — at vocab 262k the (B,S,V)
+        tensor is the biggest activation in the model; keeping it bf16 and
+        sharding V over "model" is what makes the large-vocab archs fit."""
+        table = params["embed"]["table"] if self.cfg.tie_embeddings else params["lm_head"]["table"]
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, table, preferred_element_type=jnp.float32
+        ).astype(jnp.bfloat16)
+        if self.cfg.logit_softcap:
+            c = self.cfg.logit_softcap
+            logits = (jnp.tanh(logits.astype(jnp.float32) / c) * c).astype(jnp.bfloat16)
+        return shard_act(logits, ("batch", None, "vocab"))
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Next-token CE. batch: tokens (B,S) [+ positions3]. Returns
+        (per_example_loss (B,), aux). CE via streaming max/logsumexp over the
+        bf16 logits (no f32 (B,S,V) materialization)."""
+        tokens = batch["tokens"]
+        ctx = self._ctx(batch)
+        x = self._embed_in(params, tokens)
+        x, aux_lb = self._stack_apply_train(params, x, ctx)
+        x = _norm_apply(self.cfg.final_norm, params["final_norm"], x)
+        # un-shard the sequence BEFORE the unembed: otherwise the dtable
+        # backward contraction (V-sharded dlogits x seq-sharded x) makes
+        # GSPMD all-gather the full f32 logits (measured 128 GB wire on
+        # minitron); gathering x here is 805 MB bf16 instead.
+        x = shard_act(x, ("batch", None, "embed"))
+        logits = self._logits(params, x[:, :-1])
+        targets = tokens[:, 1:].astype(jnp.int32)
+        nll = _sharded_ce(logits, targets)
+        per_ex = jnp.mean(nll, axis=-1) + self.cfg.lb_loss_weight * aux_lb / max(self.cfg.n_layers, 1)
+        return per_ex, {"lb_loss": aux_lb}
+
+    # -- serving ---------------------------------------------------------------
+    def cache_defs(self, batch: int, cache_len: int) -> Dict[str, Any]:
+        defs: Dict[str, Any] = {}
+        for gi, g in enumerate(self.cfg.groups):
+            period: Dict[str, Any] = {}
+            for bi, b in enumerate(g.blocks):
+                cd = block_cache_defs(b, batch, cache_len)
+                if cd is not None:
+                    period[f"b{bi}"] = cd
+            for bi, b in enumerate(g.shared):
+                cd = block_cache_defs(b, batch, cache_len)
+                if cd is not None:
+                    period[f"s{bi}"] = cd
+            if period:
+                defs[f"g{gi}"] = stack_defs(period, g.repeat)
+        return defs
+
+    def init_cache(self, batch: int, cache_len: int):
+        return init_tree(self.cache_defs(batch, cache_len), jax.random.PRNGKey(0))
+
+    def cache_axes(self, batch: int, cache_len: int):
+        return axes_tree(self.cache_defs(batch, cache_len))
+
+    def prefill(self, params, batch):
+        """Full-prompt forward; returns (last_token_logits, cache)."""
+        tokens = batch["tokens"]
+        cache_len = batch.get("cache_len", tokens.shape[1])
+        ctx = self._ctx(batch, cache_len=cache_len)
+        x = self._embed_in(params, tokens)
+        caches: Dict[str, Any] = {}
+        for gi, g in enumerate(self.cfg.groups):
+            gp = params[f"g{gi}"]
+            shared_p = params.get(f"g{gi}_shared")
+
+            def body(x, p_slice, g=g, shared_p=shared_p):
+                entries: Dict[str, Any] = {}
+                for bi, b in enumerate(g.blocks):
+                    x, c = apply_block_prefill(b, p_slice[f"b{bi}"], x, ctx)
+                    if c is not None:
+                        entries[f"b{bi}"] = c
+                for bi, b in enumerate(g.shared):
+                    x, c = apply_block_prefill(b, shared_p[f"b{bi}"], x, ctx)
+                    if c is not None:
+                        entries[f"s{bi}"] = c
+                return x, entries
+
+            x, stacked = jax.lax.scan(body, x, gp)
+            if stacked:
+                caches[f"g{gi}"] = stacked
+        x = _norm_apply(self.cfg.final_norm, params["final_norm"], x)
+        logits = self._logits(params, x[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, cache, batch):
+        """One new token. batch: token (B,1), pos () int32."""
+        token, pos = batch["token"], batch["pos"]
+        ctx = self._ctx({"tokens": token})
+        x = self._embed_in(params, token)
+        new_caches: Dict[str, Any] = {}
+        for gi, g in enumerate(self.cfg.groups):
+            gp = params[f"g{gi}"]
+            shared_p = params.get(f"g{gi}_shared")
+            gc = cache.get(f"g{gi}")
+
+            def body(x, slices, g=g, shared_p=shared_p):
+                p_slice, c_slice = slices
+                new_entries: Dict[str, Any] = {}
+                for bi, b in enumerate(g.blocks):
+                    key = f"b{bi}"
+                    if key in c_slice:
+                        x, nc = apply_block_decode(b, p_slice[key], x, c_slice[key], pos, ctx)
+                        new_entries[key] = nc
+                    else:
+                        x, nc = apply_block_decode(b, p_slice[key], x, None, pos, ctx)
+                for bi, b in enumerate(g.shared):
+                    key = f"s{bi}"
+                    x, nc = apply_block_decode(b, shared_p[f"b{bi}"], x, c_slice.get(key), pos, ctx)
+                    if key in c_slice:
+                        new_entries[key] = nc
+                return x, new_entries
+
+            if gc is not None:
+                x, new_gc = jax.lax.scan(body, x, (gp, gc))
+                new_caches[f"g{gi}"] = new_gc
+            else:
+                def body_nc(x, p_slice, g=g, shared_p=shared_p):
+                    for bi, b in enumerate(g.blocks):
+                        x, _ = apply_block_decode(b, p_slice[f"b{bi}"], x, None, pos, ctx)
+                    return x, None
+                x, _ = jax.lax.scan(body_nc, x, gp)
+        x = _norm_apply(self.cfg.final_norm, params["final_norm"], x)
+        logits = self._logits(params, x)
+        return logits, new_caches

@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    chain_clip,
+)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "clip_by_global_norm",
+    "chain_clip",
+    "constant",
+    "cosine_warmup",
+    "linear_warmup",
+]

@@ -1,0 +1,148 @@
+"""Sharded-friendly optimizers (no optax in this container; built from scratch).
+
+Interface mirrors optax's GradientTransformation:
+
+    opt = adam(lr_schedule)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = tree_sub(params, updates)          # or the IPLS eps-weighted apply
+
+Design notes for the IPLS / ZeRO-1 mapping (core/sharded.py):
+  * All optimizer state leaves have the SAME shape as the parameter leaf they
+    belong to, so the state can be sharded with the same PartitionSpec as the
+    gradient shard each data-parallel rank ("agent") owns. This is what makes
+    the paper's 'responsible agent updates its own partitions' expressible as
+    sharding annotations.
+  * ``update`` is elementwise per leaf (no cross-leaf reductions except the
+    optional global-norm clip, which is one psum-able scalar), so it runs
+    unmodified on a 1/N shard of the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+OptState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState]]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        updates = jax.tree.map(lambda g: lr_t * g, grads)
+        return updates, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: lr_t * (beta * m + g.astype(jnp.float32)), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: lr_t * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamLeaf(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jax.tree.map(
+            lambda p: AdamLeaf(
+                m=jnp.zeros_like(p, jnp.float32), v=jnp.zeros_like(p, jnp.float32)
+            ),
+            params,
+        )
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        count = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - jnp.power(b1, count)
+        bc2 = 1.0 - jnp.power(b2, count)
+
+        def leaf(g, s):
+            g32 = g.astype(jnp.float32)
+            m = b1 * s.m + (1 - b1) * g32
+            v = b2 * s.v + (1 - b2) * jnp.square(g32)
+            upd = lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return upd, AdamLeaf(m=m, v=v)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        outs = [leaf(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_state = treedef.unflatten([o[1] for o in outs])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, wd: float = 0.1) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+    sched = _as_schedule(lr)
+
+    def update(grads, state, params, step):
+        updates, new_state = base.update(grads, state, params, step)
+        lr_t = sched(step)
+        updates = jax.tree.map(
+            lambda u, p: u + lr_t * wd * p.astype(jnp.float32), updates, params
+        )
+        return updates, new_state
+
+    return Optimizer(base.init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda l: l * scale.astype(l.dtype), tree), norm
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params, step)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+
+    return sched
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return sched

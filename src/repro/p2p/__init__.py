@@ -1,0 +1,11 @@
+from repro.p2p.ipfs_sim import ContentStore, PubSub, SimIPFS
+from repro.p2p.network import NetworkConditions, PERFECT, LOSSY
+
+__all__ = [
+    "ContentStore",
+    "PubSub",
+    "SimIPFS",
+    "NetworkConditions",
+    "PERFECT",
+    "LOSSY",
+]

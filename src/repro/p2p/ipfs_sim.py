@@ -1,0 +1,191 @@
+"""In-process IPFS substitute: content-addressed store + pub/sub topics.
+
+Offline container => no real IPFS daemon. This module provides the two IPFS
+facilities IPLS uses (paper §2.2):
+
+  * a content-addressed blob store (add -> CID, cat CID -> bytes), used by
+    Terminate() to hand off partition values;
+  * pub/sub topics, used for initialisation broadcast, membership events and
+    partition-update exchange.
+
+Messages traverse a ``NetworkConditions`` model (loss/delay in *rounds*,
+matching the paper's round-structured asynchrony). Delivery is pulled by the
+simulation driver calling ``tick()`` once per training round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.p2p.network import NetworkConditions, PERFECT
+
+
+class ContentStore:
+    """Content-addressed storage: CID = sha256 of the payload bytes."""
+
+    def __init__(self) -> None:
+        self._blobs: Dict[str, bytes] = {}
+
+    def add(self, data: bytes) -> str:
+        cid = hashlib.sha256(data).hexdigest()
+        self._blobs[cid] = data
+        return cid
+
+    def cat(self, cid: str) -> bytes:
+        if cid not in self._blobs:
+            raise KeyError(f"unknown CID {cid[:12]}…")
+        return self._blobs[cid]
+
+    def has(self, cid: str) -> bool:
+        return cid in self._blobs
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+
+@dataclasses.dataclass
+class Message:
+    topic: str
+    sender: int
+    payload: Any
+    sent_round: int
+    deliver_round: int
+    nbytes: int
+
+
+class PubSub:
+    """Topic-based pub/sub with per-message loss/delay and traffic metering."""
+
+    def __init__(self, conditions: NetworkConditions = PERFECT, seed: int = 0):
+        self.conditions = conditions
+        self.rng = np.random.default_rng(seed)
+        self._subs: Dict[str, List[int]] = defaultdict(list)
+        self._inflight: List[Message] = []
+        self._inbox: Dict[int, List[Message]] = defaultdict(list)
+        self.round = 0
+        # traffic accounting: bytes sent/received per agent (for scalability bench)
+        self.bytes_sent: Dict[int, int] = defaultdict(int)
+        self.bytes_recv: Dict[int, int] = defaultdict(int)
+        self.messages_sent = 0
+        self.messages_dropped = 0
+        self._offline: set[int] = set()
+
+    # -- membership of the transport --------------------------------------
+    def subscribe(self, topic: str, agent: int) -> None:
+        if agent not in self._subs[topic]:
+            self._subs[topic].append(agent)
+
+    def unsubscribe(self, topic: str, agent: int) -> None:
+        if agent in self._subs[topic]:
+            self._subs[topic].remove(agent)
+
+    def set_offline(self, agent: int, offline: bool) -> None:
+        """Paper: agents 'may get disconnected ... for a short while'."""
+        if offline:
+            self._offline.add(agent)
+        else:
+            self._offline.discard(agent)
+
+    def is_offline(self, agent: int) -> bool:
+        return agent in self._offline
+
+    # -- data plane --------------------------------------------------------
+    def publish(self, topic: str, sender: int, payload: Any, nbytes: int) -> None:
+        if sender in self._offline:
+            self.messages_dropped += 1
+            return
+        self.messages_sent += 1
+        self.bytes_sent[sender] += nbytes
+        for agent in self._subs[topic]:
+            if agent == sender:
+                continue
+            delivered, delay = self.conditions.sample(self.rng)
+            if not delivered or agent in self._offline:
+                self.messages_dropped += 1
+                continue
+            self._inflight.append(
+                Message(
+                    topic=topic,
+                    sender=sender,
+                    payload=payload,
+                    sent_round=self.round,
+                    deliver_round=self.round + delay,
+                    nbytes=nbytes,
+                )
+            )
+
+    def send(self, topic: str, sender: int, recipient: int, payload: Any, nbytes: int) -> None:
+        """Directed message (UpdateModel request/reply); same loss/delay model."""
+        if sender in self._offline:
+            self.messages_dropped += 1
+            return
+        self.messages_sent += 1
+        self.bytes_sent[sender] += nbytes
+        delivered, delay = self.conditions.sample(self.rng)
+        if not delivered or recipient in self._offline:
+            self.messages_dropped += 1
+            return
+        self._inflight.append(
+            Message(
+                topic=topic,
+                sender=sender,
+                payload=payload,
+                sent_round=self.round,
+                deliver_round=self.round + delay,
+                nbytes=nbytes,
+                )
+        )
+        # a directed message is routed to exactly one inbox on delivery
+        self._inflight[-1].topic = f"__direct__:{recipient}:{topic}"
+
+    def tick(self) -> None:
+        """Advance one round: deliver everything due this round."""
+        still: List[Message] = []
+        for msg in self._inflight:
+            if msg.deliver_round > self.round:
+                still.append(msg)
+                continue
+            if msg.topic.startswith("__direct__:"):
+                _, recip_s, _ = msg.topic.split(":", 2)
+                recipients = [int(recip_s)]
+            else:
+                recipients = [a for a in self._subs[msg.topic] if a != msg.sender]
+            for agent in recipients:
+                if agent in self._offline:
+                    self.messages_dropped += 1
+                    continue
+                self._inbox[agent].append(msg)
+                self.bytes_recv[agent] += msg.nbytes
+        self._inflight = still
+        self.round += 1
+
+    def drain(self, agent: int, topic_prefix: str = "") -> List[Message]:
+        box = self._inbox[agent]
+        if not topic_prefix:
+            out, self._inbox[agent] = box, []
+            return out
+        out = [m for m in box if topic_prefix in m.topic]
+        self._inbox[agent] = [m for m in box if topic_prefix not in m.topic]
+        return out
+
+    def total_bytes(self) -> int:
+        return sum(self.bytes_sent.values())
+
+
+class SimIPFS:
+    """The bundle an IPLS agent sees: one shared store + one shared pubsub.
+
+    Mirrors the role of the IPFS daemon each agent runs in the paper; since we
+    simulate in-process, all agents share the same substrate object.
+    """
+
+    def __init__(self, conditions: NetworkConditions = PERFECT, seed: int = 0):
+        self.store = ContentStore()
+        self.pubsub = PubSub(conditions, seed)
+
+    def tick(self) -> None:
+        self.pubsub.tick()

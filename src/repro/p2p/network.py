@@ -1,0 +1,41 @@
+"""Seeded network-condition models for the IPFS substrate simulation.
+
+The paper evaluates IPLS under mininet with 'perfect connectivity' and
+'imperfect connectivity' where 'messages ... are probable to be lost or to be
+delivered after the start of the next training iteration'. We model exactly
+those two effects per message:
+
+  * loss:   message dropped with prob ``loss_prob``;
+  * delay:  message delivered ``d`` rounds late, d ~ Geometric(delay_prob),
+            capped at ``max_delay_rounds``.
+
+Determinism: every decision is drawn from a numpy Generator seeded at
+construction, so experiments are exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConditions:
+    loss_prob: float = 0.0
+    delay_prob: float = 0.0
+    max_delay_rounds: int = 2
+
+    def sample(self, rng: np.random.Generator) -> tuple[bool, int]:
+        """Returns (delivered, delay_rounds) for one message."""
+        if self.loss_prob > 0 and rng.random() < self.loss_prob:
+            return False, 0
+        delay = 0
+        if self.delay_prob > 0:
+            while delay < self.max_delay_rounds and rng.random() < self.delay_prob:
+                delay += 1
+        return True, delay
+
+
+PERFECT = NetworkConditions()
+# "imperfect connectivity" setting used in the paper-matching experiments
+LOSSY = NetworkConditions(loss_prob=0.15, delay_prob=0.25, max_delay_rounds=2)

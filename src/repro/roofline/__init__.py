@@ -1,0 +1,15 @@
+from repro.roofline.analysis import (
+    HW,
+    HardwareSpec,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+)
+
+__all__ = [
+    "HW",
+    "HardwareSpec",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes_from_hlo",
+]

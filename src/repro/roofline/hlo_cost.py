@@ -1,0 +1,288 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+(verified empirically: a scan of 10 matmuls reports the flops of 1). Every
+model here scans over layers (and microbatches), so flops/bytes/collectives
+would be undercounted by up to ~80x. This module parses the post-SPMD
+optimized HLO text, builds the computation call graph, infers while trip
+counts from the loop condition, and multiplies costs through.
+
+Accounting:
+  * flops: dot ops only (2 flops/MAC, matching XLA's convention);
+    convolutions and elementwise transcendentals are negligible for these
+    workloads (no conv archs — Whisper's conv frontend is stubbed).
+  * bytes: per materializing instruction (fusion boundaries): operands +
+    output. Instructions inside fused computations are not materialized, so
+    their bytes are skipped (their dots still count flops).
+  * collectives: per-device wire bytes with ring accounting (see analysis.py),
+    scaled by the enclosing loop's trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "u1": 1, "s1": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+# one shape, optionally preceded by a /*index=N*/ comment (tuple members)
+_SHAPE = re.compile(
+    r"^(\(?)((?:(?:/\*index=\d+\*/\s*)?\w+\[[\d,]*\](?:\{[\d,:TS()]*\})?(?:,\s*)?)+)\)?"
+)
+_ONE_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_NAME = re.compile(r"^\s*(\w[\w\-]*)\(")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_WHILE = re.compile(r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_COND_CONST = re.compile(r"constant\((\d+)\)")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_DOT_DIMS = re.compile(
+    r"(?:lhs_batch_dims=\{([\d,]*)\}.*?)?lhs_contracting_dims=\{([\d,]*)\}"
+)
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _ONE_SHAPE.finditer(s):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_shapes: List[Tuple[str, Tuple[int, ...]]]
+    op: str
+    rest: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    # edges: (kind, callee) with kind in {while_body, while_cond, call}
+    edges: List[Tuple[str, str, Optional[int]]] = dataclasses.field(default_factory=list)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hm = _COMP_HEADER.match(line.strip()) if line.strip().endswith("{") else None
+        if hm:
+            cur = Computation(hm.group(2))
+            comps[cur.name] = cur
+            if hm.group(1):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        sm = _SHAPE.match(rhs)
+        if not sm:
+            continue
+        shape_str = sm.group(0)
+        rest = rhs[len(shape_str):].strip()
+        opm = _OP_NAME.match(rest)
+        op = opm.group(1) if opm else rest.split("(")[0].strip()
+        out_shapes = _parse_shapes(shape_str)
+        operands = _OPERANDS.findall(rest)
+        instr = Instr(name=name, out_shapes=out_shapes, op=op, rest=rest, operands=operands)
+        cur.instrs.append(instr)
+        wm = _WHILE.search(rest)
+        if wm:
+            tm = _TRIP.search(rest)
+            trips = int(tm.group(1)) if tm else None
+            cur.edges.append(("while_cond", wm.group(1), trips))
+            cur.edges.append(("while_body", wm.group(2), trips))
+        else:
+            for callee in _CALLS.findall(rest):
+                cur.edges.append(("call", callee, None))
+    if entry is None:
+        # fall back: first computation
+        entry = next(iter(comps)) if comps else ""
+    comps["__entry__"] = comps.get(entry, Computation("__entry__"))
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation: the constant compared
+    against the induction variable. Falls back to 1."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = _COND_CONST.search(ins.rest)
+            if m:
+                consts.append(int(m.group(1)))
+        if ins.op == "compare":
+            pass
+    return max(consts) if consts else 1
+
+
+def _dot_flops(ins: Instr, shapes_by_name: Dict[str, List[Tuple[str, Tuple[int, ...]]]]) -> float:
+    """2 * batch * M * N * K from the dot dimension numbers."""
+    dm = _DOT_DIMS.search(ins.rest)
+    ops = [o for o in ins.operands if o in shapes_by_name]
+    if len(ops) < 2:
+        return 0.0
+    lhs = shapes_by_name[ops[0]][0][1] if shapes_by_name[ops[0]] else ()
+    out_elems = 1
+    for dt, dims in ins.out_shapes:
+        for d in dims:
+            out_elems *= d
+        break
+    if dm is None:
+        # scalar-ish dot; approximate with output elements
+        return 2.0 * out_elems
+    lcontract = [int(x) for x in (dm.group(2) or "").split(",") if x]
+    k = 1
+    for idx in lcontract:
+        if idx < len(lhs):
+            k *= lhs[idx]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+_COLLECTIVES = {
+    "all-gather": "all-gather",
+    "all-gather-start": "all-gather",
+    "all-reduce": "all-reduce",
+    "all-reduce-start": "all-reduce",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-permute-start": "collective-permute",
+}
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    entry_name = comps.get("__entry_name__")
+    entry = comps["__entry__"]
+
+    # a computation called from a fusion instruction is fused (its tensors
+    # are not materialized; bytes are accounted at the fusion call site)
+    fused: set = set()
+    for c in comps.values():
+        if not isinstance(c, Computation):
+            continue
+        for ins in c.instrs:
+            if ins.op == "fusion":
+                for callee in _CALLS.findall(ins.rest):
+                    fused.add(callee)
+
+    # multipliers via DFS over the call graph
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or not isinstance(comps[name], Computation) or depth > 50:
+            return
+        mult[name] += m
+        c = comps[name]
+        for i, (kind, callee, trips) in enumerate(c.edges):
+            if kind == "while_body":
+                if trips is None:
+                    cond_name = (
+                        c.edges[i - 1][1]
+                        if i > 0 and c.edges[i - 1][0] == "while_cond"
+                        else None
+                    )
+                    trips = (
+                        _trip_count(comps[cond_name])
+                        if cond_name and cond_name in comps
+                        else 1
+                    )
+                visit(callee, m * max(trips, 1), depth + 1)
+            elif kind == "while_cond":
+                visit(callee, m * max(trips or 1, 1), depth + 1)
+            else:
+                visit(callee, m, depth + 1)
+
+    if entry_name:
+        visit(entry_name, 1.0)
+
+    cost = HloCost()
+    for cname, m in mult.items():
+        c = comps.get(cname)
+        if not isinstance(c, Computation):
+            continue
+        shapes_by_name = {ins.name: ins.out_shapes for ins in c.instrs}
+        materializes = cname not in fused
+        for ins in c.instrs:
+            if ins.op == "dot":
+                cost.flops += m * _dot_flops(ins, shapes_by_name)
+            kind = _COLLECTIVES.get(ins.op)
+            if kind is not None:
+                out_b = _shape_bytes(ins.out_shapes)
+                oper_b = sum(
+                    _shape_bytes(shapes_by_name.get(o, [])) for o in ins.operands
+                )
+                if kind == "all-gather":
+                    wire = out_b
+                elif kind == "reduce-scatter":
+                    wire = oper_b
+                elif kind == "all-reduce":
+                    wire = 2 * out_b
+                elif kind == "all-to-all":
+                    wire = max(oper_b, out_b)
+                else:  # collective-permute
+                    wire = out_b
+                cost.collective_bytes[kind] += m * wire
+            # "copy" is excluded: XLA-CPU materializes while-loop carries with
+            # explicit copies (including whole stacked-parameter trees, x trip
+            # count); on TPU these buffers alias and never touch HBM.
+            if materializes and ins.op not in (
+                "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+                "while", "after-all", "copy",
+            ):
+                out_b = _shape_bytes(ins.out_shapes)
+                oper_b = sum(
+                    _shape_bytes(shapes_by_name.get(o, [])) for o in ins.operands
+                )
+                cost.bytes += m * (out_b + oper_b)
+    return cost

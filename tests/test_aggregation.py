@@ -1,0 +1,65 @@
+"""Aggregation math: eps updates, masked mean, staleness decay."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    EpsState,
+    aggregate_partition,
+    apply_staleness_decay,
+    init_eps,
+    masked_mean,
+    replica_consensus,
+    update_eps,
+)
+
+
+def test_eps_update_rule():
+    st = init_eps(alpha=0.5)
+    st = update_eps(st, jnp.asarray(4.0))
+    # eps = 0.5*1 + 0.5*(1/4)
+    assert np.isclose(float(st.eps), 0.625)
+    st = update_eps(st, jnp.asarray(2.0))
+    assert np.isclose(float(st.eps), 0.5 * 0.625 + 0.5 * 0.5)
+
+
+def test_eps_unchanged_when_no_contributors():
+    st = init_eps(alpha=0.3)
+    st2 = update_eps(st, jnp.asarray(0.0))
+    assert float(st2.eps) == float(st.eps)
+
+
+def test_masked_mean_matches_numpy():
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((5, 7)).astype(np.float32)
+    m = np.array([1, 0, 1, 1, 0], np.float32)
+    got = masked_mean(jnp.asarray(d), jnp.asarray(m))
+    want = d[m.astype(bool)].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_masked_mean_empty_is_zero():
+    d = jnp.ones((3, 4))
+    m = jnp.zeros((3,))
+    assert float(jnp.max(jnp.abs(masked_mean(d, m)))) == 0.0
+
+
+def test_aggregate_partition_applies_eps():
+    w = jnp.ones((8,))
+    deltas = jnp.ones((2, 8)) * 2.0
+    mask = jnp.ones((2,))
+    st = init_eps(alpha=0.5)
+    new_w, st2 = aggregate_partition(w, deltas, mask, st)
+    np.testing.assert_allclose(np.asarray(new_w), 1.0 - 1.0 * 2.0)  # eps=1 first round
+    assert np.isclose(float(st2.eps), 0.75)  # 0.5 + 0.5/2
+
+
+def test_replica_consensus_mean():
+    vals = jnp.stack([jnp.zeros(4), jnp.ones(4) * 2])
+    np.testing.assert_allclose(np.asarray(replica_consensus(vals)), 1.0)
+
+
+def test_staleness_decay():
+    d = jnp.ones((4,))
+    out = apply_staleness_decay(d, jnp.asarray(2), beta=0.5)
+    np.testing.assert_allclose(np.asarray(out), 0.25)

@@ -1,0 +1,75 @@
+"""FL-level behaviour: IPLS converges and tracks centralized FedAvg
+(the paper's Fig 2 claim, scaled down for CI speed)."""
+import numpy as np
+import pytest
+
+from repro.data import iid_split, synth_mnist
+from repro.fl import IPLSSimulation, SimConfig, run_centralized, run_gossip
+from repro.p2p.network import LOSSY
+
+
+@pytest.fixture(scope="module")
+def data():
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=3000, num_test=800, seed=0)
+    return x_tr, y_tr, x_te, y_te
+
+
+def test_ipls_converges_and_tracks_centralized(data):
+    x_tr, y_tr, x_te, y_te = data
+    shards = iid_split(x_tr, y_tr, 4, seed=0)
+    cfg = SimConfig(num_agents=4, num_partitions=8, pi=2, rho=2, rounds=8, local_iters=5)
+    hist = IPLSSimulation(cfg, shards, x_te, y_te).run()
+    hist_c = run_centralized(shards, x_te, y_te, rounds=8, local_iters=5)
+    acc_ipls = hist[-1]["acc_mean"]
+    acc_c = hist_c[-1]["acc_mean"]
+    assert acc_ipls > 0.8, acc_ipls                      # it learns
+    assert acc_ipls > hist[0]["acc_mean"] + 0.3          # it improves
+    assert acc_c - acc_ipls < 0.1, (acc_c, acc_ipls)     # tracks centralized
+
+
+def test_ipls_survives_lossy_network(data):
+    x_tr, y_tr, x_te, y_te = data
+    shards = iid_split(x_tr, y_tr, 4, seed=0)
+    cfg = SimConfig(
+        num_agents=4, num_partitions=8, pi=2, rho=2, rounds=8,
+        local_iters=5, conditions=LOSSY,
+    )
+    hist = IPLSSimulation(cfg, shards, x_te, y_te).run()
+    assert hist[-1]["acc_mean"] > 0.6  # degraded but converging
+
+
+def test_ipls_survives_churn(data):
+    x_tr, y_tr, x_te, y_te = data
+    shards = iid_split(x_tr, y_tr, 4, seed=0)
+    churn = {2: [(3, "offline")], 5: [(3, "online")]}
+    cfg = SimConfig(
+        num_agents=4, num_partitions=8, pi=2, rho=2, rounds=8,
+        local_iters=5, churn=churn, memory=True,
+    )
+    hist = IPLSSimulation(cfg, shards, x_te, y_te).run()
+    assert hist[-1]["acc_mean"] > 0.75
+    # the disconnected round ran with fewer active agents
+    assert hist[2]["active"] == 3
+
+
+def test_gossip_baseline_runs(data):
+    x_tr, y_tr, x_te, y_te = data
+    shards = iid_split(x_tr, y_tr, 3, seed=0)
+    hist = run_gossip(shards, x_te, y_te, rounds=3, fanout=1, local_iters=3)
+    assert hist[-1]["acc_mean"] > 0.3
+    assert hist[-1]["bytes_total"] > 0
+
+
+def test_ipls_traffic_scales_per_agent_constant(data):
+    """Paper scalability claim: per-agent traffic per round is ~constant in
+    the number of agents."""
+    x_tr, y_tr, x_te, y_te = data
+    per_agent = []
+    for n in (3, 6):
+        shards = iid_split(x_tr, y_tr, n, seed=0)
+        cfg = SimConfig(num_agents=n, num_partitions=8, pi=2, rho=2, rounds=3, local_iters=2)
+        sim = IPLSSimulation(cfg, shards, x_te, y_te)
+        sim.run()
+        per_agent.append(sim.net.pubsub.total_bytes() / n / 3)
+    ratio = per_agent[1] / per_agent[0]
+    assert ratio < 1.5, per_agent  # doubling agents does NOT double per-agent traffic

@@ -1,0 +1,120 @@
+"""Per-kernel allclose sweeps: shapes x dtypes vs the pure-jnp oracles,
+all in interpret mode (the kernel body executes on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(7)
+
+
+# --- ipls_aggregate ---------------------------------------------------------
+@pytest.mark.parametrize("N", [128, 4096, 70001])
+@pytest.mark.parametrize("R", [1, 3, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ipls_aggregate(N, R, dtype):
+    from repro.kernels.ipls_aggregate.ops import aggregate
+    from repro.kernels.ipls_aggregate.ref import ipls_aggregate_ref
+
+    w = jnp.asarray(RNG.standard_normal(N), dtype)
+    d = jnp.asarray(RNG.standard_normal((R, N)), dtype)
+    m = jnp.asarray(RNG.integers(0, 2, R), jnp.float32)
+    eps = jnp.asarray(0.6, jnp.float32)
+    got = aggregate(w, d, m, eps)
+    ref = ipls_aggregate_ref(w, d, m, eps)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# --- flash attention ---------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 2, 256, 128), (1, 1, 384, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(shape, causal, dtype):
+    from repro.kernels.flash_attention.ops import attention
+    from repro.kernels.flash_attention.ref import mha_ref
+
+    B, H, S, D = shape
+    q = jnp.asarray(RNG.standard_normal(shape), dtype)
+    k = jnp.asarray(RNG.standard_normal(shape), dtype)
+    v = jnp.asarray(RNG.standard_normal(shape), dtype)
+    got = attention(q, k, v, causal=causal)
+    ref = mha_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_gqa_repeat():
+    from repro.kernels.flash_attention.ops import attention
+    from repro.kernels.flash_attention.ref import mha_ref
+
+    q = jnp.asarray(RNG.standard_normal((1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), jnp.float32)
+    got = attention(q, k, v)
+    ref = mha_ref(q, jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# --- decode attention ---------------------------------------------------------
+@pytest.mark.parametrize("shape", [(2, 4, 256, 64), (1, 8, 512, 128)])
+@pytest.mark.parametrize("pos_frac", [0.0, 0.4, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(shape, pos_frac, dtype):
+    from repro.kernels.decode_attention.ops import decode
+    from repro.kernels.decode_attention.ref import decode_ref
+
+    B, H, S, D = shape
+    pos = int((S - 1) * pos_frac)
+    q = jnp.asarray(RNG.standard_normal((B, H, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal(shape), dtype)
+    v = jnp.asarray(RNG.standard_normal(shape), dtype)
+    got = decode(q, k, v, pos)
+    ref = decode_ref(q, k, v, jnp.asarray(pos))
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# --- rwkv6 linear scan ----------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 64, 2, 32), (2, 128, 2, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_scan(shape, dtype):
+    from repro.kernels.linear_scan.ops import linear_scan
+    from repro.kernels.linear_scan.ref import rwkv6_ref
+
+    B, T, H, K = shape
+    r = jnp.asarray(RNG.standard_normal(shape) * 0.5, dtype)
+    k = jnp.asarray(RNG.standard_normal(shape) * 0.5, dtype)
+    v = jnp.asarray(RNG.standard_normal(shape) * 0.5, dtype)
+    logw = jnp.asarray(-np.exp(RNG.standard_normal(shape) * 0.5), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, K)) * 0.1, jnp.float32)
+    got, gs = linear_scan(r, k, v, logw, u)
+    ref, rs = rwkv6_ref(r, k, v, logw, u)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(rs), atol=tol, rtol=tol)
+
+
+# --- quantize ----------------------------------------------------------------------
+@pytest.mark.parametrize("N", [8192, 100000])
+def test_quantize_matches_ref_and_error_feedback(N):
+    from repro.kernels.quantize.ops import compress, decompress
+    from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+    x = jnp.asarray(RNG.standard_normal(N), jnp.float32)
+    e = jnp.asarray(RNG.standard_normal(N) * 0.01, jnp.float32)
+    q, s, ne = compress(x, e)
+    pad = (-N) % 8192
+    qr, sr, ner = quantize_ref(jnp.pad(x, (0, pad)), jnp.pad(e, (0, pad)))
+    assert np.array_equal(np.asarray(q), np.asarray(qr)[:N])
+    np.testing.assert_allclose(np.asarray(ne), np.asarray(ner)[:N], atol=1e-6)
+    # EF invariant: dequant(q) + new_err == x + err
+    deq = dequantize_ref(qr, sr)[:N]
+    np.testing.assert_allclose(np.asarray(deq + ne), np.asarray(x + e), atol=1e-5)

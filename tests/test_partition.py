@@ -1,0 +1,89 @@
+"""Partition-table tests, including the paper's own worked example (§2.1)."""
+import pytest
+
+from repro.core.partition import PartitionSpec, PartitionTable, flatten_params, unflatten_params
+
+import numpy as np
+
+
+def test_paper_example_pi4_rho2():
+    """Paper §2.1: K=6, pi=4, rho=2. Agent 1 bootstraps with all 6; agent 2
+    takes 4; agent 3 takes 4; a fourth agent cannot store anything."""
+    t = PartitionTable(num_partitions=6, pi=4, rho=2)
+    t.bootstrap(1)
+    assert t.partitions_of(1) == [0, 1, 2, 3, 4, 5]
+    t.join(2)
+    assert t.load(2) == 4
+    # paper: agent 1 'remains responsible for' 4 partitions; 2 transferred +
+    # 2 replicated => 8 total slots with two partitions at rho=2
+    assert t.load(1) + t.load(2) == 8
+    t.join(3)
+    assert t.load(3) == 4
+    # every partition replicated at most twice
+    for p in range(6):
+        assert 1 <= t.replication(p) <= 2
+    # all partitions now at rho=2 (total slots 12 = 3 agents * 4)
+    assert sum(t.replication(p) for p in range(6)) == 12
+    t.join(4)
+    assert t.load(4) == 0  # paper: 'New agents cannot store any partition'
+    t.validate()
+
+
+def test_join_transfers_from_overloaded():
+    t = PartitionTable(num_partitions=8, pi=2, rho=1)
+    t.bootstrap(0)
+    t.join(1)
+    # rho=1: replication impossible; the new agent must TAKE partitions
+    assert t.load(1) == 2
+    assert t.load(0) == 6
+    for p in range(8):
+        assert t.replication(p) == 1
+    t.validate()
+
+
+def test_leave_hands_off_orphans():
+    t = PartitionTable(num_partitions=4, pi=2, rho=1)
+    t.bootstrap(0)
+    t.join(1)
+    held = t.partitions_of(1)
+    t.leave(1)
+    assert t.coverage()
+    for p in held:
+        assert t.holders_of(p) == [0]
+    t.validate()
+
+
+def test_leave_with_replicas_no_handoff_needed():
+    t = PartitionTable(num_partitions=4, pi=4, rho=2)
+    t.bootstrap(0)
+    t.join(1)
+    handoff = t.leave(1)
+    assert t.coverage()
+    assert all(v is None for v in handoff.values())
+
+
+def test_fail_reassigns():
+    t = PartitionTable(num_partitions=6, pi=3, rho=1)
+    t.bootstrap(0)
+    t.join(1)
+    t.join(2)
+    t.fail(0)
+    assert t.coverage()
+    t.validate()
+
+
+def test_spec_even():
+    s = PartitionSpec.even(103, 10)
+    assert s.num_partitions == 10
+    assert s.total == 103
+    assert max(s.sizes) - min(s.sizes) <= 1
+    offs = s.offsets()
+    assert offs[0] == 0 and offs[-1] + s.sizes[-1] == 103
+
+
+def test_flatten_roundtrip():
+    params = {"a": np.arange(6, dtype=np.float32).reshape(2, 3), "b": {"c": np.ones(4, np.float32)}}
+    vec, layout = flatten_params(params)
+    back = unflatten_params(vec, layout)
+    np.testing.assert_array_equal(back["a"], params["a"])
+    np.testing.assert_array_equal(back["b"]["c"], params["b"]["c"])

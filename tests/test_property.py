@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import init_eps, masked_mean, update_eps
+from repro.core.partition import PartitionSpec, PartitionTable
+
+
+# ---- partition control plane ------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(2, 12),
+    pi=st.integers(1, 6),
+    rho=st.integers(1, 4),
+    ops=st.lists(st.integers(0, 2), min_size=1, max_size=12),
+    data=st.data(),
+)
+def test_partition_invariants_under_churn(k, pi, rho, ops, data):
+    """Under any join/leave/fail sequence: validate() holds, coverage holds
+    while agents remain, nobody exceeds rho except coverage-preserving
+    handoff, and every agent holds <= K partitions."""
+    t = PartitionTable(k, pi, rho)
+    t.bootstrap(0)
+    next_id = 1
+    live = {0}
+    for op in ops:
+        if op == 0 or len(live) <= 1:  # join
+            t.join(next_id)
+            live.add(next_id)
+            next_id += 1
+        else:
+            victim = data.draw(st.sampled_from(sorted(live)))
+            if op == 1:
+                t.leave(victim)
+            else:
+                t.fail(victim)
+            live.discard(victim)
+        t.validate()
+        if live:
+            assert t.coverage()
+        for a in list(live):
+            assert 0 <= t.load(a) <= k
+
+
+@settings(max_examples=30, deadline=None)
+@given(total=st.integers(1, 10_000), k=st.integers(1, 64))
+def test_partition_spec_even_properties(total, k):
+    s = PartitionSpec.even(total, k)
+    assert s.total == total
+    assert len(s.sizes) == k
+    assert max(s.sizes) - min(s.sizes) <= 1
+    offs = s.offsets()
+    for i in range(1, k):
+        assert offs[i] == offs[i - 1] + s.sizes[i - 1]
+
+
+# ---- aggregation math ----------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 8),
+    n=st.integers(1, 65),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_mean_bounded_by_extremes(r, n, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((r, n)).astype(np.float32)
+    m = rng.integers(0, 2, r).astype(np.float32)
+    out = np.asarray(masked_mean(jnp.asarray(d), jnp.asarray(m)))
+    if m.sum() == 0:
+        assert np.all(out == 0)
+    else:
+        sel = d[m.astype(bool)]
+        assert np.all(out <= sel.max(axis=0) + 1e-5)
+        assert np.all(out >= sel.min(axis=0) - 1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    alpha=st.floats(0.01, 0.99),
+    rs=st.lists(st.integers(1, 50), min_size=1, max_size=40),
+)
+def test_eps_stays_in_unit_interval(alpha, rs):
+    """eps is a convex combination of 1 and 1/r terms => always in (0, 1]."""
+    stt = init_eps(alpha=alpha)
+    for r in rs:
+        stt = update_eps(stt, jnp.asarray(float(r)))
+        e = float(stt.eps)
+        assert 0.0 < e <= 1.0 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1))
+def test_quantize_error_feedback_invariant(n, seed):
+    """dequant(q)*scale + residual == input, for any shape."""
+    from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+    rng = np.random.default_rng(seed)
+    pad = (-n) % 1024
+    x = jnp.asarray(rng.standard_normal(n + pad), jnp.float32)
+    e = jnp.zeros_like(x)
+    q, s, ne = quantize_ref(x, e)
+    deq = dequantize_ref(q, s)
+    np.testing.assert_allclose(np.asarray(deq + ne), np.asarray(x), atol=1e-5)
+    # quantization error bounded by scale/2 per block
+    err_blocks = np.asarray(ne).reshape(-1, 1024)
+    np.testing.assert_array_less(
+        np.abs(err_blocks).max(axis=1), np.maximum(np.asarray(s), 1e-12) * 0.51 + 1e-7
+    )

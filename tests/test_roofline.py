@@ -1,0 +1,77 @@
+"""The trip-count-aware HLO cost analyzer: verified against hand-computable
+programs (this is what makes the roofline table honest for scanned models)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import analyze_hlo_text
+
+
+def _cost(fn, *args):
+    return analyze_hlo_text(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((256, 256), jnp.float32)
+    c = _cost(lambda x: x @ x, a)
+    assert np.isclose(c.flops, 2 * 256**3, rtol=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    a = jnp.zeros((256, 256), jnp.float32)
+
+    def scanned(x):
+        x, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=7)
+        return x
+
+    c = _cost(scanned, a)
+    assert np.isclose(c.flops, 7 * 2 * 256**3, rtol=0.01)
+
+
+def test_nested_scan():
+    a = jnp.zeros((128, 128), jnp.float32)
+
+    def nested(x):
+        def outer(c, _):
+            c, _ = jax.lax.scan(lambda ci, _: (ci @ ci, None), c, None, length=4)
+            return c, None
+        x, _ = jax.lax.scan(outer, x, None, length=3)
+        return x
+
+    c = _cost(nested, a)
+    assert np.isclose(c.flops, 12 * 2 * 128**3, rtol=0.01)
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((4, 64, 64), jnp.float32)
+    c = _cost(lambda x: jnp.einsum("bij,bjk->bik", x, x), a)
+    assert np.isclose(c.flops, 4 * 2 * 64**3, rtol=0.01)
+
+
+def test_bytes_scale_with_trips():
+    a = jnp.zeros((256, 256), jnp.float32)
+
+    def scanned(x):
+        x, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=10)
+        return x
+
+    c1 = _cost(lambda x: x @ x, a)
+    c10 = _cost(scanned, a)
+    assert c10.bytes > 5 * c1.bytes  # roughly linear in trips
+
+
+def test_roofline_report_terms():
+    from repro.roofline.analysis import RooflineReport
+
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=1e18, hlo_bytes=1e15, collective_bytes={"all-reduce": 5e10},
+        model_flops=5e17,
+    )
+    assert np.isclose(r.compute_s, 1e18 / (256 * 197e12))
+    assert np.isclose(r.memory_s, 1e15 / (256 * 819e9))
+    assert np.isclose(r.collective_s, 5e10 / 50e9)
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.roofline_fraction <= 1.0
+    assert np.isclose(r.useful_flops_ratio, 0.5)

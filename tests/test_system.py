@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system: the full IPLS protocol
+training the paper's model on the simulated substrate, plus the datacenter
+train-step built end-to-end through the launcher on the smoke mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import iid_split, synth_mnist
+from repro.fl import IPLSSimulation, SimConfig
+
+
+def test_end_to_end_ipls_training():
+    """Boot 3 agents, train the paper's MLP for 5 rounds over simulated
+    IPFS, verify the assembled global model improved and every agent
+    converged to (nearly) the same model."""
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=2000, num_test=500, seed=1)
+    shards = iid_split(x_tr, y_tr, 3, seed=1)
+    cfg = SimConfig(num_agents=3, num_partitions=6, pi=2, rho=2, rounds=5, local_iters=5)
+    sim = IPLSSimulation(cfg, shards, x_te, y_te)
+    hist = sim.run()
+    assert hist[-1]["acc_mean"] > hist[0]["acc_mean"] + 0.2
+    # agents agree: per-agent accuracy spread is small by the last round
+    assert hist[-1]["acc_std"] < 0.08
+    # traffic was metered
+    assert sim.net.pubsub.total_bytes() > 0
+
+
+def test_end_to_end_datacenter_train_step():
+    """Build the full launcher path (model -> shardings -> jit) on the
+    1-device smoke mesh with a reduced arch, run 3 real steps, loss drops."""
+    from repro.configs import get_config, build_model
+    from repro.configs.registry import ShapeSpec
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.steps import build_train_step
+    from repro.core.sharded import init_state, IplsStepConfig
+    from repro.optim import sgd
+
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    model = build_model(cfg)
+    mesh = make_smoke_mesh()
+    shape = ShapeSpec("smoke", seq_len=32, global_batch=4, kind="train")
+    opt = sgd(0.5)
+    built = build_train_step(
+        model, mesh, shape,
+        optimizer=opt,
+        step_cfg=IplsStepConfig(grad_clip=1.0),
+    )
+    params = model.init(0)
+    state = init_state(params, opt)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 256, (4, 32)), jnp.int32),
+        "participation": jnp.ones((4,), jnp.float32),
+    }
+    step = jax.jit(built.fn, in_shardings=built.in_shardings, out_shardings=built.out_shardings)
+    with built.mesh:
+        losses = []
+        for _ in range(3):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert int(state.step) == 3
+    assert not np.isnan(losses[-1])
+
+
+def test_elastic_restart_from_checkpoint(tmp_path):
+    """Fault tolerance at the datacenter layer: kill after step 2, restore,
+    continue — state matches an uninterrupted run."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.sharded import init_state, make_train_step, IplsStepConfig, IplsTrainState
+    from repro.optim import sgd
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean(jnp.square(pred - batch["y"]), axis=-1), {}
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+    batch = {
+        "x": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+        "y": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+    }
+    opt = sgd(0.1)
+    step = jax.jit(make_train_step(loss_fn, opt, IplsStepConfig(use_eps=False, grad_clip=None)))
+
+    # uninterrupted
+    s = init_state(params, opt)
+    for _ in range(4):
+        s, _ = step(s, batch)
+    w_ref = np.asarray(s.params["w"])
+
+    # interrupted + restored
+    mgr = CheckpointManager(str(tmp_path))
+    s = init_state(params, opt)
+    for _ in range(2):
+        s, _ = step(s, batch)
+    mgr.save(jax.tree.map(np.asarray, s), step=2)
+    restored, step_no = mgr.restore_latest(jax.tree.map(np.asarray, s))
+    assert step_no == 2
+    s2 = IplsTrainState(*jax.tree.map(jnp.asarray, restored))
+    for _ in range(2):
+        s2, _ = step(s2, batch)
+    np.testing.assert_allclose(np.asarray(s2.params["w"]), w_ref, rtol=1e-6)
