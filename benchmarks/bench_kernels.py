@@ -15,7 +15,7 @@ from benchmarks.common import csv_row
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # single warmup call (block handles pytrees)
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)

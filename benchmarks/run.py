@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
     ap.add_argument(
         "--only", default=None,
-        help="comma list of: convergence,fault,scalability,roofline,kernels",
+        help="comma list of: convergence,fault,scalability,roofline,kernels,rounds",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -25,6 +25,7 @@ def main() -> None:
         bench_fault_tolerance,
         bench_kernels,
         bench_roofline,
+        bench_rounds,
         bench_scalability,
     )
 
@@ -37,6 +38,14 @@ def main() -> None:
 
     if want("kernels"):
         for r in bench_kernels.run():
+            print(r)
+        sys.stdout.flush()
+    if want("rounds"):
+        rounds = 2 if args.quick else 4
+        counts = (10, 32) if args.quick else (10, 32, 100)
+        for r in bench_rounds.run(
+            rounds=rounds, agent_counts=counts, out_json="benchmarks/out_rounds.json"
+        ):
             print(r)
         sys.stdout.flush()
     if want("roofline"):

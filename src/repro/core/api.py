@@ -43,6 +43,31 @@ class PartitionState:
     value: np.ndarray  # authoritative value of the owned partition
     eps: float = 1.0  # staleness weight (paper's epsilon)
     version: int = 0
+    # dense message plane: contributor deltas land in a preallocated
+    # (capacity, size) row buffer instead of a python list of arrays — the
+    # buffer feeds the (batched) aggregation kernels directly and amortizes
+    # all per-message allocations across rounds.
+    pending: Optional[np.ndarray] = None
+    pending_n: int = 0
+
+    def push_delta(self, sl: np.ndarray) -> None:
+        if self.pending is None:
+            self.pending = np.empty((4, self.value.size), np.float32)
+        elif self.pending_n == self.pending.shape[0]:
+            grown = np.empty((2 * self.pending.shape[0], self.value.size), np.float32)
+            grown[: self.pending_n] = self.pending
+            self.pending = grown
+        self.pending[self.pending_n] = sl
+        self.pending_n += 1
+
+    def drain_pending(self) -> Optional[np.ndarray]:
+        """View of the r delta rows received this round (None when empty);
+        resets the row count but keeps the allocation."""
+        if self.pending_n == 0:
+            return None
+        rows = self.pending[: self.pending_n]
+        self.pending_n = 0
+        return rows
 
 
 class IPLSAgent:
@@ -66,7 +91,6 @@ class IPLSAgent:
         self.alpha = alpha
         self.owned: Dict[int, PartitionState] = {}
         self.cache: Dict[int, np.ndarray] = {}
-        self._pending_deltas: Dict[int, List[np.ndarray]] = {}
         self._requesters: Dict[int, List[int]] = {}
         self.live = True
 
@@ -131,7 +155,7 @@ class IPLSAgent:
             sl = delta[offsets[k] : offsets[k] + self.spec.sizes[k]]
             if k in self.owned:
                 # local contribution to my own partition: no network traffic
-                self._pending_deltas.setdefault(k, []).append(sl.astype(np.float32))
+                self.owned[k].push_delta(sl)
                 continue
             holders = self.table.holders_of(k)
             if not holders:
@@ -154,7 +178,7 @@ class IPLSAgent:
         for msg in self.net.pubsub.drain(self.id, UPDATE_TOPIC):
             k, sl = msg.payload
             if k in self.owned:
-                self._pending_deltas.setdefault(k, []).append(sl)
+                self.owned[k].push_delta(sl)
                 self._requesters.setdefault(k, []).append(msg.sender)
 
     def serve_replies(self) -> None:
@@ -178,12 +202,12 @@ class IPLSAgent:
         if not self.live:
             return
         for k, st in self.owned.items():
-            deltas = self._pending_deltas.pop(k, [])
-            r = len(deltas)
-            if r == 0:
+            deltas = st.drain_pending()
+            if deltas is None:
                 continue
+            r = deltas.shape[0]
             st.eps = self.alpha * st.eps + (1.0 - self.alpha) / r
-            agg = np.sum(np.stack(deltas), axis=0)
+            agg = deltas.sum(axis=0)
             st.value = st.value - st.eps * agg
             st.version += 1
 

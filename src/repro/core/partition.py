@@ -41,11 +41,18 @@ class PartitionSpec:
         return int(sum(self.sizes))
 
     def offsets(self) -> Tuple[int, ...]:
+        # memoized: update_model/load_model call this on every round; the
+        # frozen dataclass still has a __dict__, so plain item assignment
+        # caches without tripping the frozen __setattr__.
+        cached = self.__dict__.get("_offsets")
+        if cached is not None:
+            return cached
         out, acc = [], 0
         for s in self.sizes:
             out.append(acc)
             acc += s
-        return tuple(out)
+        self.__dict__["_offsets"] = tuple(out)
+        return self.__dict__["_offsets"]
 
     @staticmethod
     def even(total: int, k: int) -> "PartitionSpec":

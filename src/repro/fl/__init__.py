@@ -1,6 +1,6 @@
 from repro.fl.local_trainer import LocalTrainer
 from repro.fl.centralized import run_centralized
-from repro.fl.rounds import IPLSSimulation, SimConfig
+from repro.fl.rounds import IPLSSimulation, SimConfig, make_simulation
 from repro.fl.gossip import run_gossip
 
 __all__ = [
@@ -8,5 +8,6 @@ __all__ = [
     "run_centralized",
     "IPLSSimulation",
     "SimConfig",
+    "make_simulation",
     "run_gossip",
 ]

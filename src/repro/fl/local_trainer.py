@@ -34,16 +34,24 @@ class LocalTrainer:
             _, self._layout = flatten_params(mlp_mnist.init_params(0))
         return self._layout
 
+    def draw_batch(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Advance this agent's private RNG stream by one round's batch
+        selection. The single source of truth for the per-round data order —
+        the vectorized engine draws through this same method, which is what
+        keeps the two engines' SGD inputs identical."""
+        bs = min(self.batch_size, len(self.x))
+        sel = self._rng.choice(len(self.x), size=bs, replace=False)
+        return self.x[sel], self.y[sel]
+
     def train_delta(self, w_flat: np.ndarray) -> np.ndarray:
         """Run local SGD from w_flat; return delta = w_before - w_after
         (the paper's convention: holders apply w <- w - eps*delta)."""
         params = unflatten_params(w_flat.astype(np.float32), self.layout())
-        bs = min(self.batch_size, len(self.x))
-        sel = self._rng.choice(len(self.x), size=bs, replace=False)
+        xb, yb = self.draw_batch()
         new_params = mlp_mnist.sgd_steps(
             jax.tree.map(np.asarray, params),
-            self.x[sel],
-            self.y[sel],
+            xb,
+            yb,
             self.lr,
             self.local_iters,
         )

@@ -44,6 +44,37 @@ class SimConfig:
     # churn: map round -> list of (agent_id, "offline"|"online"|"leave"|"crash"|"join")
     churn: Optional[Dict[int, List[Tuple[int, str]]]] = None
     memory: bool = True  # False = 'memoryless training' (paper Fig 3b)
+    # round engine: "scalar" (per-agent loops; handles loss/delay/churn) or
+    # "vectorized" (whole-round batched device calls; PERFECT + no churn
+    # only — see fl/vectorized.py and docs/ENGINE.md)
+    engine: str = "scalar"
+
+
+def eval_subset(live: List[int], eval_agents: int) -> List[int]:
+    """Deterministic stride-spread of at most ``eval_agents`` agents over the
+    live set (0 = all). Shared by both engines so they evaluate the same
+    agents."""
+    if eval_agents and len(live) > eval_agents:
+        stride = max(len(live) // eval_agents, 1)
+        live = live[::stride][:eval_agents]
+    return live
+
+
+def make_simulation(cfg: SimConfig, shards, x_test, y_test):
+    """Engine factory: returns the simulation object for ``cfg.engine``.
+
+    Both engines expose ``run() -> List[dict]`` / ``run_round`` / ``history``
+    and produce equivalent results under PERFECT conditions (property-tested
+    in tests/test_vectorized.py); the vectorized engine batches each round
+    into three device calls and is the one to use at scale.
+    """
+    if cfg.engine == "vectorized":
+        from repro.fl.vectorized import VectorizedIPLSSimulation
+
+        return VectorizedIPLSSimulation(cfg, shards, x_test, y_test)
+    if cfg.engine != "scalar":
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+    return IPLSSimulation(cfg, shards, x_test, y_test)
 
 
 class IPLSSimulation:
@@ -148,11 +179,9 @@ class IPLSSimulation:
     def evaluate(self) -> dict:
         accs = []
         any_trainer = next(iter(self.trainers.values()))
-        live = [a for a, ag in self.agents.items() if ag.live]
-        if self.cfg.eval_agents and len(live) > self.cfg.eval_agents:
-            # deterministic spread over the live set
-            stride = max(len(live) // self.cfg.eval_agents, 1)
-            live = live[::stride][: self.cfg.eval_agents]
+        live = eval_subset(
+            [a for a, ag in self.agents.items() if ag.live], self.cfg.eval_agents
+        )
         for a in live:
             w = self.agents[a].load_model()
             accs.append(any_trainer.evaluate(w, self.x_test, self.y_test))

@@ -1,0 +1,423 @@
+"""Vectorized IPLS round engine: whole-round batching across agents/partitions.
+
+The scalar engine (`fl/rounds.py`) dispatches one jitted SGD call per agent,
+one numpy slice-copy per (agent, partition) message and one tiny numpy
+reduction per partition — Python overhead linear in A*K per round. This
+engine reproduces the *same* per-round dataflow as ONE fused device call
+that batches the three round phases:
+
+  1. local SGD for all A agents at once — agents' flat weights assembled
+     into an (A, N) matrix inside the call and trained with `jax.vmap` over
+     `mlp_mnist.sgd_steps_flat` (flat-space SGD, bit-identical to the tree
+     scan of `sgd_steps`);
+  2. aggregation of every (partition, replica-slot) instance: on TPU one
+     partition-batched Pallas launch (`kernels/ipls_aggregate`) with deltas
+     laid out (K_inst, R, S) + a per-instance (mask, r, eps) table; on
+     CPU/GPU the identical math as K masked matmuls M @ (W - W2) that never
+     materialize the delta stacks — followed by replica consensus
+     (segment mean);
+  3. evaluation of the (sub-sampled) agents in one vmapped call.
+
+Only the small per-instance value tables (V_pre, V_merged, eps) cross the
+device-call boundary between rounds; the (A, N) matrices live and die
+inside the fused call.
+
+Exactness: under PERFECT network conditions with a fixed membership the
+scalar engine is fully deterministic — every agent sends each non-owned
+partition's delta to holder `H(k)[(round + agent) % rho_k]`, holders
+aggregate `w -= eps * sum(deltas)` with the eps recursion, replicas mean-
+merge AFTER replies are served (so caches hold pre-merge per-replica
+values), and agents assemble owned->merged / cached->pre-merge views. The
+engine replicates exactly that, including per-agent data batch RNG streams,
+so the two engines agree to float tolerance round by round (tested in
+tests/test_vectorized.py).
+
+Scope: PERFECT conditions, no churn (the scalar engine remains the oracle
+and the only engine for lossy/churny scenarios — see docs/ENGINE.md).
+Traffic accounting is computed in closed form from the partition table and
+matches the scalar engine's pubsub byte counters.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import unflatten_params
+from repro.kernels.ipls_aggregate.ops import aggregate_batched
+from repro.models import mlp_mnist
+from repro.p2p.network import PERFECT
+
+
+class VectorizedIPLSSimulation:
+    """Drop-in engine for `IPLSSimulation` under PERFECT/no-churn configs.
+
+    Construction delegates to the scalar engine so the bootstrap/join
+    protocol (partition transfers, donor caches, membership traffic) is
+    byte-for-byte identical; the resulting state is then snapshotted into
+    dense arrays and all rounds run batched.
+    """
+
+    def __init__(self, cfg, shards, x_test, y_test, use_kernel: bool | None = None):
+        from repro.fl.rounds import IPLSSimulation
+
+        # aggregation backend: the partition-batched Pallas kernel natively
+        # on TPU; the identical-math XLA masked-matmul elsewhere (running the
+        # kernel through the interpreter in the hot loop would be pure
+        # emulation overhead — interpret mode is for correctness tests)
+        self._use_kernel = (
+            jax.default_backend() == "tpu" if use_kernel is None else use_kernel
+        )
+        if cfg.conditions != PERFECT:
+            raise ValueError(
+                "engine='vectorized' supports PERFECT network conditions only; "
+                "use the scalar engine for lossy/delayed networks"
+            )
+        if cfg.churn:
+            raise ValueError(
+                "engine='vectorized' does not support churn schedules; "
+                "use the scalar engine"
+            )
+        self.cfg = cfg
+        self.x_test, self.y_test = x_test, y_test
+        # exact init state + init-phase traffic via the scalar constructor
+        seed_sim = IPLSSimulation(cfg, shards, x_test, y_test)
+        self.net = seed_sim.net
+        self.spec = seed_sim.spec
+        self.table = seed_sim.table
+        self.layout = seed_sim.layout
+        self.history: List[dict] = []
+
+        A = cfg.num_agents
+        K = self.spec.num_partitions
+        sizes = np.asarray(self.spec.sizes, np.int64)
+        offsets = np.asarray(self.spec.offsets(), np.int64)
+        N = self.spec.total
+        self.A, self.K, self.N = A, K, N
+
+        # ---- instance plane: one row per (partition, replica-slot) --------
+        holders: List[List[int]] = [self.table.holders_of(k) for k in range(K)]
+        inst_k: List[int] = []
+        inst_owner: List[int] = []
+        inst_id: Dict[Tuple[int, int], int] = {}
+        for k in range(K):
+            for j, h in enumerate(holders[k]):
+                inst_id[(k, j)] = len(inst_k)
+                inst_k.append(k)
+                inst_owner.append(h)
+        self.K_inst = len(inst_k)
+        self._inst_k = np.asarray(inst_k, np.int32)
+        self._inst_owner = np.asarray(inst_owner, np.int32)
+        rho = np.asarray([len(h) for h in holders], np.int64)
+
+        # padded instance size: tail zeros flow through the batched kernel
+        # untouched (0 - eps*0), so one shared width serves all partitions
+        self.S = int(sizes.max())
+        self._sizes = sizes
+        self._offsets = offsets
+
+        # ---- snapshot values / eps / caches from the scalar init ----------
+        V_pre = np.zeros((self.K_inst, self.S), np.float32)
+        eps = np.ones((self.K_inst,), np.float32)
+        for k in range(K):
+            for j, h in enumerate(holders[k]):
+                st = seed_sim.agents[h].owned[k]
+                V_pre[inst_id[(k, j)], : sizes[k]] = st.value
+                eps[inst_id[(k, j)]] = st.eps
+        V_merged = np.zeros((K, self.S), np.float32)
+        for k in range(K):
+            V_merged[k] = V_pre[inst_id[(k, 0)]]
+        owner_col = np.zeros((A, K), bool)
+        for k in range(K):
+            for h in holders[k]:
+                owner_col[h, k] = True
+        self._owner_col = owner_col
+
+        # round-0 warm-up traffic (agents fetch partitions absent from both
+        # their owned set and the donor caches left behind by joins)
+        fetch_bytes = 0
+        for a in range(A):
+            ag = seed_sim.agents[a]
+            for k in range(K):
+                if k not in ag.owned and k not in ag.cache:
+                    fetch_bytes += 16 + 4 * int(sizes[k])
+        self._round0_fetch_bytes = fetch_bytes
+
+        # steady-state per-round traffic: every agent updates every non-owned
+        # partition (4*s_k up + 4*s_k reply) and each replica of a
+        # rho_k>1 partition publishes once for consensus
+        upd = int(np.sum((A - rho) * 4 * sizes))
+        replica = int(np.sum(np.where(rho > 1, rho * 4 * sizes, 0)))
+        self._round_bytes = 2 * upd + replica
+        self._bytes_total = self.net.pubsub.total_bytes()
+
+        # ---- per-phase routing tables (period = lcm of replication) -------
+        # non-owner a targets H(k)[(round + a) % rho_k]; the pattern repeats
+        # with period lcm(rho_k), so all gather/scatter index tensors are
+        # precomputed once
+        self._period = int(np.lcm.reduce(rho)) if len(rho) else 1
+        agents_arr = np.arange(A)
+        self._t_inst: List[np.ndarray] = []
+        self._contrib_idx: List[np.ndarray] = []
+        self._contrib_mask: List[np.ndarray] = []
+        R_cap = 1
+        for p in range(self._period):
+            contrib: List[List[int]] = [[] for _ in range(self.K_inst)]
+            t_inst = np.zeros((A, K), np.int32)
+            for k in range(K):
+                rk = len(holders[k])
+                jsel = (p + agents_arr) % rk
+                for a in range(A):
+                    if owner_col[a, k]:
+                        # owners read the post-consensus value: index into the
+                        # merged section of the concatenated [V_pre; V_merged]
+                        # value table the W-rebuild gathers from
+                        t_inst[a, k] = self.K_inst + k
+                    else:
+                        i = inst_id[(k, int(jsel[a]))]
+                        t_inst[a, k] = i
+                        contrib[i].append(a)
+            # owner contributes first (matches scalar pending-row order)
+            rows = [[self._inst_owner[i]] + contrib[i] for i in range(self.K_inst)]
+            R_cap = max(R_cap, max(len(r) for r in rows))
+            self._t_inst.append(t_inst)
+            self._contrib_idx.append(rows)  # ragged; padded below
+        self.R_cap = R_cap
+        self._contrib_M: List[np.ndarray] = []  # (K_inst, A) 0/1 contribution matrix
+        for p in range(self._period):
+            idx = np.zeros((self.K_inst, R_cap), np.int32)
+            msk = np.zeros((self.K_inst, R_cap), np.float32)
+            M = np.zeros((self.K_inst, A), np.float32)
+            for i, row in enumerate(self._contrib_idx[p]):
+                idx[i, : len(row)] = row
+                msk[i, : len(row)] = 1.0
+                M[i, row] = 1.0
+            self._contrib_idx[p] = idx
+            self._contrib_mask.append(msk)
+            self._contrib_M.append(M)
+
+        # ---- state carried across rounds ---------------------------------
+        # only the small per-instance value tables persist; the (A, N)
+        # weight matrix is an INTERNAL tensor of the fused round call (never
+        # a device-call boundary buffer — at 32 agents it is ~57 MB and the
+        # allocation alone costs more than the round's math)
+        self._V_pre = jnp.asarray(V_pre)
+        self._V_merged = jnp.asarray(V_merged)
+        self._eps = jnp.asarray(eps)
+        self._last_phase = self._period - 1  # any phase: all replicas equal at init
+
+        # ---- trainers: the scalar constructor's LocalTrainer objects own
+        # the per-agent RNG streams; drawing batches through their
+        # draw_batch() keeps both engines' SGD inputs identical by
+        # construction ----
+        self._trainers = [seed_sim.trainers[a] for a in range(A)]
+        bs = [min(cfg.batch_size, len(shards[a][0])) for a in range(A)]
+        # contiguous buckets of equal batch size (array_split shard sizes
+        # differ by at most one, so there are at most two)
+        self._buckets: List[Tuple[int, int, int]] = []
+        start = 0
+        for a in range(1, A + 1):
+            if a == A or bs[a] != bs[start]:
+                self._buckets.append((start, a, bs[start]))
+                start = a
+
+        # eval subset: shared stride helper => same agents as the scalar engine
+        from repro.fl.rounds import eval_subset
+
+        self._eval_idx = np.asarray(eval_subset(list(range(A)), cfg.eval_agents), np.int32)
+
+        self._build_jitted()
+
+    # -- jitted batched phases ---------------------------------------------
+    def _build_jitted(self):
+        cfg, layout = self.cfg, self.layout
+        A, K, N, S = self.A, self.K, self.N, self.S
+        inst_k = jnp.asarray(self._inst_k)
+        off_inst = jnp.asarray(self._offsets[self._inst_k], jnp.int32)
+        size_inst = jnp.asarray(self._sizes[self._inst_k], jnp.int32)
+        counts = jnp.asarray(
+            np.bincount(self._inst_k, minlength=K).astype(np.float32)
+        )
+        offsets, sizes = self._offsets, self._sizes
+        alpha = float(cfg.alpha)
+        lr, iters = float(cfg.lr), int(cfg.local_iters)
+
+        layout_t = tuple((name, tuple(shape)) for name, shape in layout)
+
+        def _one_delta(w, x, y):
+            # flat-space SGD (bit-identical to the tree scan: same GEMMs,
+            # same update order) — saves the per-agent tree<->vector passes
+            return w - mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t)
+
+        use_kernel = self._use_kernel
+        # instance rows grouped by partition for the masked-matmul path
+        inst_of_k = [np.nonzero(self._inst_k == k)[0] for k in range(K)]
+        x_te = jnp.asarray(self.x_test)
+        y_te = jnp.asarray(self.y_test)
+        E = len(self._eval_idx)
+
+        def build_W(V_pre, V_merged, t_inst, rows: int):
+            """Assemble ``rows`` agents' flat weights from the concatenated
+            value table: owners' t_inst entries point past K_inst into the
+            merged section, everyone else's at the pre-merge value of the
+            replica that served their UpdateModel reply. One concatenate =
+            one output pass (a dynamic_update_slice chain copies the whole
+            (rows, N) buffer K times on the CPU backend)."""
+            V_all = jnp.concatenate([V_pre, V_merged], axis=0)
+            return jnp.concatenate(
+                [V_all[t_inst[:, k], : sizes[k]] for k in range(K)], axis=1
+            )
+
+        # instance rows are k-major, so each partition's instances form a
+        # contiguous row range of the (K_inst, A) contribution matrix
+        inst_row0 = [int(rows[0]) if len(rows) else 0 for rows in inst_of_k]
+
+        def round_core(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M, t_eval):
+            """Aggregation + replica consensus + eval, given the pre/post
+            local-SGD weight matrices. Holder h's received-delta sum for an
+            instance is the masked column reduction M @ (W - W2) over its
+            partition window — computed as two GEMMs so the (A, N) delta
+            matrix is never materialized."""
+            # eps recursion refreshed from r BEFORE applying (paper §2.2)
+            r = jnp.sum(contrib_mask, axis=1)
+            eps_new = jnp.where(
+                r > 0, alpha * eps + (1.0 - alpha) / jnp.maximum(r, 1.0), eps
+            )
+            base = V_merged[inst_k]
+            if use_kernel:
+                # TPU: lay the deltas out (K_inst, R, S) and aggregate every
+                # (partition, replica-slot) instance in ONE kernel launch.
+                # The kernel computes w - eps*masked_mean; the scalar engine
+                # applies w - eps*sum, so the kernel gets eps*r.
+                D = W - W2
+                lane = jnp.arange(S, dtype=jnp.int32)
+                valid = lane[None, :] < size_inst[:, None]      # (K_inst, S)
+                col = jnp.where(valid, off_inst[:, None] + lane[None, :], 0)
+                G = D[contrib_idx[:, :, None], col[:, None, :]]  # (K_inst,R,S)
+                G = G * valid[:, None, :]
+                V_pre = aggregate_batched(base, G, contrib_mask, eps_new * r)
+            else:
+                # CPU/GPU: K small masked matmuls, identical math
+                V_pre = base
+                for k in range(K):
+                    rows = inst_of_k[k]
+                    Mk = contrib_M[inst_row0[k] : inst_row0[k] + len(rows)]
+                    Wk = jax.lax.dynamic_slice(W, (0, int(offsets[k])), (A, int(sizes[k])))
+                    W2k = jax.lax.dynamic_slice(W2, (0, int(offsets[k])), (A, int(sizes[k])))
+                    agg_k = Mk @ Wk - Mk @ W2k                   # (rho_k, s_k)
+                    upd = base[rows, : sizes[k]] - eps_new[rows, None] * agg_k
+                    V_pre = V_pre.at[rows, : sizes[k]].set(upd)
+            # replica consensus: mean over each partition's replica slots
+            V_merged_new = (
+                jax.ops.segment_sum(V_pre, inst_k, num_segments=K) / counts[:, None]
+            )
+            # evaluate ONLY the sub-sampled agents: their assembled rows are
+            # a few MB, so the full (A, N) matrix never leaves this call
+            W_eval = build_W(V_pre, V_merged_new, t_eval, E)
+            accs = jax.vmap(
+                lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
+            )(W_eval)
+            return V_pre, V_merged_new, eps_new, accs
+
+        def fused_round(V_pre, V_merged, eps, X, Y, t_prev, contrib_idx, contrib_mask, contrib_M, t_eval):
+            """One whole training round in a single device call: rebuild all
+            agents' weights, run every agent's local SGD, aggregate every
+            partition instance, merge replicas, evaluate."""
+            W = build_W(V_pre, V_merged, t_prev, A)
+            W2 = jax.vmap(lambda w, x, y: mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t))(W, X, Y)
+            return round_core(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M, t_eval)
+
+        self._build_W_j = jax.jit(build_W, static_argnums=(3,))
+        self._round_core_j = jax.jit(round_core)
+        self._fused_round = jax.jit(fused_round, donate_argnums=(0, 1, 2))
+        self._batched_deltas_keep = jax.jit(
+            lambda W, X, Y: jax.vmap(_one_delta)(W, X, Y)
+        )
+        # routing tables cycle with the phase; upload to device once
+        self._phase_tables = [
+            (
+                jnp.asarray(self._contrib_idx[p]),
+                jnp.asarray(self._contrib_mask[p]),
+                jnp.asarray(self._contrib_M[p]),
+                jnp.asarray(self._t_inst[p]),
+                jnp.asarray(self._t_inst[p][self._eval_idx]),
+            )
+            for p in range(self._period)
+        ]
+
+    # -- one round ----------------------------------------------------------
+    def _draw_batches(self):
+        xs, ys = [], []
+        for tr in self._trainers:
+            xb, yb = tr.draw_batch()
+            xs.append(xb)
+            ys.append(yb)
+        return xs, ys
+
+    def run_round(self, rnd: int) -> dict:
+        xs, ys = self._draw_batches()
+        p = rnd % self._period
+        p_prev = self._last_phase
+        idx, mask, M, t_inst, t_eval = self._phase_tables[p]
+        t_prev = self._phase_tables[p_prev][3]
+        if len(self._buckets) == 1:
+            self._V_pre, self._V_merged, self._eps, accs = self._fused_round(
+                self._V_pre, self._V_merged, self._eps,
+                jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+                t_prev, idx, mask, M, t_eval,
+            )
+        else:
+            # heterogeneous batch sizes (at most two contiguous buckets from
+            # array_split): assemble weights once, SGD per bucket, then the
+            # shared aggregation/eval core
+            W = self._build_W_j(self._V_pre, self._V_merged, t_prev, self.A)
+            parts = [
+                self._batched_deltas_keep(
+                    W[lo:hi],
+                    jnp.asarray(np.stack(xs[lo:hi])),
+                    jnp.asarray(np.stack(ys[lo:hi])),
+                )
+                for lo, hi, _ in self._buckets
+            ]
+            W2 = W - jnp.concatenate(parts, axis=0)
+            self._V_pre, self._V_merged, self._eps, accs = self._round_core_j(
+                self._V_merged, self._eps, W, W2, idx, mask, M, t_eval
+            )
+        self._last_phase = p
+        accs = np.asarray(accs, np.float32)
+
+        self._bytes_total += self._round_bytes + (
+            self._round0_fetch_bytes if rnd == 0 else 0
+        )
+        metrics = {
+            "acc_mean": float(accs.mean()),
+            "acc_std": float(accs.std()),
+            "acc_max": float(accs.max()),
+            "round": rnd,
+            "active": self.A,
+            "bytes_total": self._bytes_total,
+        }
+        self.history.append(metrics)
+        return metrics
+
+    def run(self) -> List[dict]:
+        for rnd in range(self.cfg.rounds):
+            self.run_round(rnd)
+        return self.history
+
+    # -- introspection (tests / benchmarks) ---------------------------------
+    def agent_weights(self) -> np.ndarray:
+        """The (A, N) matrix of per-agent assembled models, equal to what
+        each scalar agent's `load_model()` would return (reconstructed from
+        the value tables and the last round's routing)."""
+        V_all = np.concatenate(
+            [np.asarray(self._V_pre), np.asarray(self._V_merged)], axis=0
+        )
+        t_inst = self._t_inst[self._last_phase]
+        W = np.zeros((self.A, self.N), np.float32)
+        for k in range(self.K):
+            off, s = self._offsets[k], self._sizes[k]
+            W[:, off : off + s] = V_all[t_inst[:, k], :s]
+        return W

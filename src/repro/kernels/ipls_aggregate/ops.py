@@ -1,15 +1,30 @@
-"""jit'd public wrapper for the fused IPLS aggregation kernel."""
+"""jit'd public wrappers for the fused IPLS aggregation kernels."""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.ipls_aggregate.ipls_aggregate import ipls_aggregate
-from repro.kernels.ipls_aggregate.ref import ipls_aggregate_ref
+from repro.kernels.ipls_aggregate.ipls_aggregate import (
+    ipls_aggregate,
+    ipls_aggregate_batched,
+)
+from repro.kernels.ipls_aggregate.ref import (
+    ipls_aggregate_batched_ref,
+    ipls_aggregate_ref,
+)
 
 
-def aggregate(w, deltas, mask, eps, use_kernel: bool = True, interpret: bool = True):
-    """Fused w <- w - eps*masked_mean(deltas). interpret=True validates the
-    TPU kernel body on CPU; on real TPU pass interpret=False."""
+def aggregate(w, deltas, mask, eps, use_kernel: bool = True, interpret: bool | None = None):
+    """Fused w <- w - eps*masked_mean(deltas). interpret=None auto-detects
+    the backend: the TPU kernel body runs natively on TPU and through the
+    Pallas interpreter everywhere else."""
     if use_kernel:
         return ipls_aggregate(w, deltas, mask, eps, interpret=interpret)
     return ipls_aggregate_ref(w, deltas, mask, eps)
+
+
+def aggregate_batched(w, deltas, mask, eps, use_kernel: bool = True, interpret: bool | None = None):
+    """Partition-batched variant: w (K,N), deltas (K,R,N), mask (K,R),
+    eps (K,) — one launch aggregates everything a holder owns."""
+    if use_kernel:
+        return ipls_aggregate_batched(w, deltas, mask, eps, interpret=interpret)
+    return ipls_aggregate_batched_ref(w, deltas, mask, eps)

@@ -17,3 +17,18 @@ def ipls_aggregate_ref(
     agg = jnp.einsum("r,rn->n", mask, deltas.astype(jnp.float32))
     agg = jnp.where(r > 0, agg / jnp.maximum(r, 1.0), jnp.zeros_like(agg))
     return (w.astype(jnp.float32) - eps.astype(jnp.float32) * agg).astype(w.dtype)
+
+
+def ipls_aggregate_batched_ref(
+    w: jax.Array,        # (K, N) partition values
+    deltas: jax.Array,   # (K, R, N) deltas per partition per contributor slot
+    mask: jax.Array,     # (K, R) 1.0 where the contribution arrived
+    eps: jax.Array,      # (K,) staleness weight per partition
+) -> jax.Array:
+    """Per-partition ``w - eps * masked_mean(deltas)``; all-zero mask rows
+    leave their partition unchanged."""
+    mask = mask.astype(jnp.float32)
+    r = jnp.sum(mask, axis=1)
+    agg = jnp.einsum("kr,krn->kn", mask, deltas.astype(jnp.float32))
+    agg = jnp.where(r[:, None] > 0, agg / jnp.maximum(r, 1.0)[:, None], jnp.zeros_like(agg))
+    return (w.astype(jnp.float32) - eps.astype(jnp.float32)[:, None] * agg).astype(w.dtype)

@@ -411,6 +411,12 @@ class MoESpec:
     num_shared: int = 0
     d_shared: int = 0                 # shared-expert hidden size (total)
     capacity_factor: float = 1.25
+    # GShard-style floor on per-expert capacity (capped at T*K): the
+    # cf-scaled capacity is relative to the balanced load T*K/E, which for a
+    # decode step (T = batch) rounds to ~1 and silently drops colliding
+    # tokens that prefill (large T) keeps — prefill/decode then disagree by
+    # a whole expert contribution. The floor makes tiny-T dispatch lossless.
+    min_capacity: int = 4
     activation: str = "silu"
     renorm: bool = True
     # dispatch groups: routing/capacity are computed PER GROUP so every
@@ -454,7 +460,7 @@ def _apply_moe_reference(params, s: MoESpec, x: jax.Array) -> Tuple[jax.Array, D
     E, K = s.num_experts, s.top_k
     G = s.groups if (s.groups > 0 and T % s.groups == 0 and T >= s.groups * max(E // K, 1)) else 1
     Tg = T // G
-    C = int(np.ceil(Tg * K / E * s.capacity_factor))
+    C = max(int(np.ceil(Tg * K / E * s.capacity_factor)), min(s.min_capacity, Tg * K))
     xg = x.reshape(G, Tg, D)
     xg = shard_act(xg, ("batch", None, "embed"))
 
@@ -536,7 +542,7 @@ def _apply_moe_shardmap(params, s: MoESpec, x: jax.Array, ctx) -> Tuple[jax.Arra
     T_loc = (B // dp_size) * S
     mp = mesh.shape.get("model", 1) if (expert_parallel or ffn_parallel) else 1
     E_loc = E // mp if expert_parallel else E
-    C = int(np.ceil(T_loc * K / E * s.capacity_factor))
+    C = max(int(np.ceil(T_loc * K / E * s.capacity_factor)), min(s.min_capacity, T_loc * K))
 
     def routed(xb, router, wg, wu, wd):
         # xb: (B_loc, S, D); wg/wu/wd expert weights, already locally sliced

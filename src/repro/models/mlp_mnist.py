@@ -60,6 +60,23 @@ def sgd_steps(params, x, y, lr: float, num_iters: int):
     return params
 
 
+@partial(jax.jit, static_argnums=(4, 5))
+def sgd_steps_flat(w_flat, x, y, lr: float, num_iters: int, layout):
+    """`sgd_steps` on the FLAT weight vector: the loss unflattens inside, so
+    the gradient arrives flat (the slice/reshape transpose fuses into the
+    backward) and callers never pay the tree->vector->tree round trips. The
+    vectorized round engine vmaps this over all agents; `layout` is the
+    (hashable) flatten layout from `core.partition.flatten_params`."""
+    from repro.core.partition import unflatten_params
+
+    def body(w, _):
+        g = jax.grad(lambda q: loss_and_acc(unflatten_params(q, layout), x, y)[0])(w)
+        return w - lr * g, None
+
+    w2, _ = jax.lax.scan(body, w_flat, None, length=num_iters)
+    return w2
+
+
 @jax.jit
 def evaluate(params, x, y) -> jax.Array:
     return loss_and_acc(params, x, y)[1]

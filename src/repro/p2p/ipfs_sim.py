@@ -55,6 +55,12 @@ class Message:
     sent_round: int
     deliver_round: int
     nbytes: int
+    # every in-flight message is addressed to exactly one recipient: directed
+    # sends trivially, and published messages because loss/delay are sampled
+    # PER SUBSCRIBER at publish time (fanning out again at delivery would
+    # deliver each value (subs-1)^2 times — observed as a duplicate-weighted
+    # replica merge for rho >= 3).
+    recipient: int = -1
 
 
 class PubSub:
@@ -115,6 +121,7 @@ class PubSub:
                     sent_round=self.round,
                     deliver_round=self.round + delay,
                     nbytes=nbytes,
+                    recipient=agent,
                 )
             )
 
@@ -137,10 +144,9 @@ class PubSub:
                 sent_round=self.round,
                 deliver_round=self.round + delay,
                 nbytes=nbytes,
-                )
+                recipient=recipient,
+            )
         )
-        # a directed message is routed to exactly one inbox on delivery
-        self._inflight[-1].topic = f"__direct__:{recipient}:{topic}"
 
     def tick(self) -> None:
         """Advance one round: deliver everything due this round."""
@@ -149,17 +155,12 @@ class PubSub:
             if msg.deliver_round > self.round:
                 still.append(msg)
                 continue
-            if msg.topic.startswith("__direct__:"):
-                _, recip_s, _ = msg.topic.split(":", 2)
-                recipients = [int(recip_s)]
-            else:
-                recipients = [a for a in self._subs[msg.topic] if a != msg.sender]
-            for agent in recipients:
-                if agent in self._offline:
-                    self.messages_dropped += 1
-                    continue
-                self._inbox[agent].append(msg)
-                self.bytes_recv[agent] += msg.nbytes
+            agent = msg.recipient
+            if agent in self._offline:
+                self.messages_dropped += 1
+                continue
+            self._inbox[agent].append(msg)
+            self.bytes_recv[agent] += msg.nbytes
         self._inflight = still
         self.round += 1
 
