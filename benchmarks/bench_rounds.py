@@ -1,11 +1,14 @@
 """Round-engine throughput: scalar (per-agent Python loops) vs vectorized
-(three batched device calls per round), same SimConfig, PERFECT network.
+(a few batched device calls per round), same SimConfig, PERFECT and LOSSY
+networks.
 
 Reports rounds/sec and agent*rounds/sec at A in {10, 32, 100} — the paper's
 scalability story is per-agent work staying constant, so agent*rounds/sec is
 the number that must GROW with A for the simulator to reach paper-scale
-agent counts. The first round per engine is excluded (jit compile +
-warm-up); both engines then run the same number of timed rounds.
+agent counts. The LOSSY rows measure the mask-stream path (pre-drawn
+loss/delay fates + delta ring buffer), i.e. the scenario that previously
+forced the scalar engine. The first round per engine is excluded (jit
+compile + warm-up); both engines then run the same number of timed rounds.
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ from typing import List
 from benchmarks.common import csv_row, load_data, save_json
 from repro.data import iid_split
 from repro.fl import SimConfig, make_simulation
+from repro.p2p.network import LOSSY, PERFECT
 
 
 def _time_engine(engine: str, shards, x_te, y_te, cfg: SimConfig, rounds: int) -> float:
@@ -28,39 +32,46 @@ def _time_engine(engine: str, shards, x_te, y_te, cfg: SimConfig, rounds: int) -
     return (time.time() - t0) / rounds
 
 
-def run(rounds: int = 4, agent_counts=(10, 32, 100), out_json: str | None = None) -> List[str]:
+def run(
+    rounds: int = 4,
+    agent_counts=(10, 32, 100),
+    lossy_agent_counts=(10, 32),
+    out_json: str | None = None,
+) -> List[str]:
     x_tr, y_tr, x_te, y_te = load_data(num_train=12000, num_test=800)
     rows: List[str] = []
     results = {}
-    for n in agent_counts:
-        shards = iid_split(x_tr, y_tr, n, seed=0)
-        cfg = SimConfig(
-            num_agents=n, num_partitions=10, pi=2, rho=2,
-            local_iters=2, batch_size=64, eval_agents=4,
-        )
-        s_scalar = _time_engine("scalar", shards, x_te, y_te, cfg, rounds)
-        s_vec = _time_engine("vectorized", shards, x_te, y_te, cfg, rounds)
-        speedup = s_scalar / s_vec
-        results[f"n{n}"] = {
-            "scalar_rounds_per_s": 1.0 / s_scalar,
-            "vectorized_rounds_per_s": 1.0 / s_vec,
-            "speedup": speedup,
-        }
-        rows.append(
-            csv_row(
-                f"rounds_scalar_n{n}",
-                s_scalar * 1e6,
-                f"rounds_per_s={1/s_scalar:.2f};agent_rounds_per_s={n/s_scalar:.1f}",
+    variants = [("", PERFECT, agent_counts), ("_lossy", LOSSY, lossy_agent_counts)]
+    for tag, cond, counts in variants:
+        for n in counts:
+            shards = iid_split(x_tr, y_tr, n, seed=0)
+            cfg = SimConfig(
+                num_agents=n, num_partitions=10, pi=2, rho=2,
+                local_iters=2, batch_size=64, eval_agents=4, conditions=cond,
             )
-        )
-        rows.append(
-            csv_row(
-                f"rounds_vectorized_n{n}",
-                s_vec * 1e6,
-                f"rounds_per_s={1/s_vec:.2f};agent_rounds_per_s={n/s_vec:.1f};"
-                f"speedup_vs_scalar={speedup:.1f}x",
+            s_scalar = _time_engine("scalar", shards, x_te, y_te, cfg, rounds)
+            s_vec = _time_engine("vectorized", shards, x_te, y_te, cfg, rounds)
+            speedup = s_scalar / s_vec
+            results[f"n{n}{tag}"] = {
+                "scalar_rounds_per_s": 1.0 / s_scalar,
+                "vectorized_rounds_per_s": 1.0 / s_vec,
+                "speedup": speedup,
+            }
+            rows.append(
+                csv_row(
+                    f"rounds_scalar{tag}_n{n}",
+                    s_scalar * 1e6,
+                    f"rounds_per_s={1/s_scalar:.2f};agent_rounds_per_s={n/s_scalar:.1f}",
+                )
             )
-        )
+            rows.append(
+                csv_row(
+                    f"rounds_vectorized{tag}_n{n}",
+                    s_vec * 1e6,
+                    f"rounds_per_s={1/s_vec:.2f};agent_rounds_per_s={n/s_vec:.1f};"
+                    f"speedup_vs_scalar={speedup:.1f}x",
+                )
+            )
     if out_json:
         save_json(out_json, results)
     return rows

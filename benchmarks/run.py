@@ -43,8 +43,10 @@ def main() -> None:
     if want("rounds"):
         rounds = 2 if args.quick else 4
         counts = (10, 32) if args.quick else (10, 32, 100)
+        lossy_counts = (10,) if args.quick else (10, 32)
         for r in bench_rounds.run(
-            rounds=rounds, agent_counts=counts, out_json="benchmarks/out_rounds.json"
+            rounds=rounds, agent_counts=counts, lossy_agent_counts=lossy_counts,
+            out_json="benchmarks/out_rounds.json",
         ):
             print(r)
         sys.stdout.flush()

@@ -122,12 +122,16 @@ class IPLSAgent:
         # holds the value) or REPLICATED (a current holder has it).
         for k in acquired:
             still_holding = set(self.table.holders_of(k))
-            val, eps, src = None, 1.0, None
+            val, eps, ver, src = None, 1.0, 0, None
             for other_id in sorted(_AGENTS):
                 other = _AGENTS[other_id]
                 if other.id != self.id and k in other.owned:
                     val = other.owned[k].value.copy()
                     eps = other.owned[k].eps
+                    # carry the version too: a replica restarting at 0 would
+                    # trail the incumbents forever and merge_replicas would
+                    # discard its publishes as stale
+                    ver = other.owned[k].version
                     src = other
                     break
             if val is None:
@@ -137,7 +141,7 @@ class IPLSAgent:
                 # cached copy for LoadModel, like any non-holder)
                 src.cache[k] = src.owned.pop(k).value
                 src._unsubscribe_partition(k)
-            self.owned[k] = PartitionState(value=val, eps=eps)
+            self.owned[k] = PartitionState(value=val, eps=eps, version=ver)
             self._subscribe_partition(k)
             # account for the partition transfer over the wire
             self.net.pubsub.publish(
@@ -237,8 +241,11 @@ class IPLSAgent:
             return
         incoming: Dict[int, List[np.ndarray]] = {}
         for msg in self.net.pubsub.drain(self.id, REPLICA_TOPIC):
-            k, val, _ver = msg.payload
-            if k in self.owned:
+            k, val, ver = msg.payload
+            # a delayed replica value published in an earlier round carries an
+            # older version; mean-merging it next to fresh values would drag
+            # the partition backwards — discard anything staler than us
+            if k in self.owned and ver >= self.owned[k].version:
                 incoming.setdefault(k, []).append(val)
         for k, vals in incoming.items():
             st = self.owned[k]
@@ -325,8 +332,40 @@ class IPLSAgent:
 
     def crash(self) -> None:
         """Unexpected failure: no upload, no broadcast. Surviving replicas (or
-        the checkpoint layer) must cover; the table reassigns ownership."""
-        self.table.fail(self.id)
+        the checkpoint layer) must cover; the table reassigns ownership.
+
+        The reassignment must also seed the DATA plane: ``fail()`` hands an
+        orphaned partition to a new holder, and without a ``PartitionState``
+        that holder drops every incoming delta (``collect`` checks
+        ``k in self.owned``) and serves no replies — freezing the partition
+        at stale cache values forever. Seed the new holder from a surviving
+        replica when one exists, else its own cached copy, else zeros, and
+        subscribe it to the partition topic."""
+        handoff = self.table.fail(self.id)
+        for k, new_holder in handoff.items():
+            if new_holder is None or new_holder not in _AGENTS:
+                continue
+            dst = _AGENTS[new_holder]
+            if k in dst.owned:
+                continue
+            val, ver = None, 0
+            for h in self.table.holders_of(k):
+                peer = _AGENTS.get(h)
+                if peer is not None and peer.id != new_holder and k in peer.owned:
+                    val = peer.owned[k].value.copy()
+                    ver = peer.owned[k].version  # stay mergeable with survivors
+                    break
+            if val is None:
+                cached = dst.cache.pop(k, None)
+                val = (
+                    cached.astype(np.float32).copy()
+                    if cached is not None
+                    else np.zeros(self.spec.sizes[k], np.float32)
+                )
+            # fresh eps; version 0 is safe here — an orphaned partition has
+            # no surviving co-holders whose publishes we could lag behind
+            dst.owned[k] = PartitionState(value=val, version=ver)
+            dst._subscribe_partition(k)
         for k in list(self.owned):
             self._unsubscribe_partition(k)
         self.owned.clear()

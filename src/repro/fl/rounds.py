@@ -14,17 +14,96 @@ the eps-weighting absorbs the shrunken contributor count r.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.api import IPLSAgent, reset_registry
+from repro.core.api import (
+    FETCH_TOPIC,
+    IPLSAgent,
+    REPLICA_TOPIC,
+    REPLY_TOPIC,
+    UPDATE_TOPIC,
+    reset_registry,
+)
 from repro.core.partition import PartitionSpec, PartitionTable
 from repro.fl.local_trainer import LocalTrainer
 from repro.models import mlp_mnist
 from repro.core.partition import flatten_params
 from repro.p2p.ipfs_sim import SimIPFS
 from repro.p2p.network import NetworkConditions, PERFECT
+
+# the simulation ticks the substrate 4 times per training round (after the
+# fetch requests, the fetch replies, the UpdateModel sends, and the
+# reply/replica sends); NetworkConditions delays are in TICK units
+TICKS_PER_ROUND = 4
+
+# message channels of the keyed fate stream (see MessageFates)
+CH_FETCH, CH_FETCH_REPLY, CH_UPDATE, CH_UPDATE_REPLY, CH_REPLICA, CH_MEMBER = range(6)
+
+
+class MessageFates:
+    """Per-message loss/delay fates keyed by message coordinates.
+
+    Every data-plane message of a round has canonical integer coordinates:
+    (channel, round, agent, partition[, peer]). Its fate (delivered?, delay
+    in ticks) is a pure hash of those coordinates
+    (``NetworkConditions.sample_stream``), NOT a position in a shared
+    sequential rng stream. That makes the stream order-free: the scalar
+    engine looks fates up one message at a time as its pubsub sends them,
+    while the vectorized engine pre-draws the whole round as (A, K) mask /
+    delay tensors — both read identical values, which is what makes
+    scalar<->vectorized equivalence under LOSSY conditions testable
+    round-by-round (weights to float tolerance, traffic counters exactly).
+    """
+
+    def __init__(self, conditions: NetworkConditions, seed: int):
+        self.conditions = conditions
+        self.seed = seed
+
+    def draw(self, channel: int, rnd, agent, part, peer=0):
+        """Vectorized fate lookup; arguments broadcast together. Returns
+        (delivered bool array, delay-in-ticks int array)."""
+        return self.conditions.sample_stream(self.seed, channel, rnd, agent, part, peer)
+
+    def draw_one(self, channel: int, rnd: int, agent: int, part: int, peer: int = 0):
+        delivered, delay = self.draw(channel, rnd, agent, part, peer)
+        return bool(delivered), int(delay)
+
+    def pubsub_fate(
+        self, topic: str, sender: int, recipient: int, payload: Any, counter: int
+    ) -> Tuple[bool, int]:
+        """Adapter installed as ``PubSub.fate_source``: map a concrete
+        pubsub message onto its keyed draw. The tick counter identifies the
+        round and the phase within it (REPLY messages at phase 1 are fetch
+        replies, at phase 3 UpdateModel replies)."""
+        rnd, phase = divmod(counter, TICKS_PER_ROUND)
+        if topic == UPDATE_TOPIC:
+            return self.draw_one(CH_UPDATE, rnd, sender, payload[0])
+        if topic == FETCH_TOPIC:
+            return self.draw_one(CH_FETCH, rnd, sender, payload[0])
+        if topic == REPLY_TOPIC:
+            ch = CH_FETCH_REPLY if phase == 1 else CH_UPDATE_REPLY
+            # keyed by the REQUESTER (so the requester-side mask tensors of
+            # the vectorized engine line up directly) plus the serving
+            # holder, so replies racing from different holders draw
+            # independent fates. (Two replies from the SAME holder for the
+            # same (requester, partition, round) — e.g. a delayed and an
+            # on-time delta both landing on a rho=1 holder — share one fate;
+            # they carry identical payloads, so only accounting correlates.)
+            return self.draw_one(ch, rnd, recipient, payload[0], sender)
+        if topic.startswith(REPLICA_TOPIC):
+            return self.draw_one(CH_REPLICA, rnd, sender, payload[0], recipient)
+        # membership topics: keyed by the pair plus the partition the event
+        # concerns, so a multi-partition join/handoff burst draws an
+        # independent fate per partition rather than all-or-nothing
+        part = 0
+        if isinstance(payload, tuple):
+            if payload[0] == "join" and len(payload) >= 3:
+                part = int(payload[2])
+            elif payload[0] == "handoff" and len(payload) >= 2:
+                part = int(payload[1])
+        return self.draw_one(CH_MEMBER, rnd, sender, part, recipient)
 
 
 @dataclasses.dataclass
@@ -44,10 +123,13 @@ class SimConfig:
     # churn: map round -> list of (agent_id, "offline"|"online"|"leave"|"crash"|"join")
     churn: Optional[Dict[int, List[Tuple[int, str]]]] = None
     memory: bool = True  # False = 'memoryless training' (paper Fig 3b)
-    # round engine: "scalar" (per-agent loops; handles loss/delay/churn) or
-    # "vectorized" (whole-round batched device calls; PERFECT + no churn
-    # only — see fl/vectorized.py and docs/ENGINE.md)
+    # round engine: "scalar" (per-agent loops; full churn support) or
+    # "vectorized" (whole-round batched device calls; any NetworkConditions,
+    # fixed membership only — see fl/vectorized.py and docs/ENGINE.md)
     engine: str = "scalar"
+    # data shard for agents added by a "join" churn action: a callable
+    # agent_id -> (x, y). None = round-robin over the initial shards.
+    join_shard: Optional[Callable[[int], Tuple[np.ndarray, np.ndarray]]] = None
 
 
 def eval_subset(live: List[int], eval_agents: int) -> List[int]:
@@ -64,9 +146,11 @@ def make_simulation(cfg: SimConfig, shards, x_test, y_test):
     """Engine factory: returns the simulation object for ``cfg.engine``.
 
     Both engines expose ``run() -> List[dict]`` / ``run_round`` / ``history``
-    and produce equivalent results under PERFECT conditions (property-tested
-    in tests/test_vectorized.py); the vectorized engine batches each round
-    into three device calls and is the one to use at scale.
+    and produce equivalent results under PERFECT *and* LOSSY conditions
+    (property-tested in tests/test_vectorized.py — weights to float
+    tolerance, traffic counters exactly); the vectorized engine batches
+    each round into a handful of device calls and is the one to use at
+    scale. Churn schedules still require the scalar engine.
     """
     if cfg.engine == "vectorized":
         from repro.fl.vectorized import VectorizedIPLSSimulation
@@ -81,8 +165,16 @@ class IPLSSimulation:
     def __init__(self, cfg: SimConfig, shards, x_test, y_test):
         self.cfg = cfg
         self.x_test, self.y_test = x_test, y_test
+        self._shards = shards
         reset_registry()
         self.net = SimIPFS(cfg.conditions, cfg.seed)
+        # imperfect connectivity: install the keyed fate stream so every
+        # message's loss/delay is a pure function of its coordinates (shared
+        # with the vectorized engine's pre-drawn mask tensors)
+        self.fates: Optional[MessageFates] = None
+        if cfg.conditions.loss_prob > 0 or cfg.conditions.delay_prob > 0:
+            self.fates = MessageFates(cfg.conditions, cfg.seed)
+            self.net.pubsub.fate_source = self.fates.pubsub_fate
         w0_params = mlp_mnist.init_params(cfg.seed)
         self.w0, self.layout = flatten_params(w0_params)
         self.spec = PartitionSpec.even(self.w0.size, cfg.num_partitions)
@@ -121,6 +213,18 @@ class IPLSSimulation:
                 agent = IPLSAgent(agent_id, self.net, self.table, self.spec, self.cfg.alpha)
                 agent.init()
                 self.agents[agent_id] = agent
+                # a joiner without a trainer never contributes a delta
+                # (run_round skips training for agents not in self.trainers):
+                # give it a data shard so it participates
+                if agent_id not in self.trainers:
+                    if self.cfg.join_shard is not None:
+                        x, y = self.cfg.join_shard(agent_id)
+                    else:
+                        x, y = self._shards[agent_id % len(self._shards)]
+                    self.trainers[agent_id] = LocalTrainer(
+                        agent_id, x, y, self.cfg.lr, self.cfg.local_iters,
+                        self.cfg.batch_size, self.cfg.seed,
+                    )
 
     def _live_online(self) -> List[int]:
         return [

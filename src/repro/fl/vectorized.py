@@ -32,10 +32,23 @@ engine replicates exactly that, including per-agent data batch RNG streams,
 so the two engines agree to float tolerance round by round (tested in
 tests/test_vectorized.py).
 
-Scope: PERFECT conditions, no churn (the scalar engine remains the oracle
-and the only engine for lossy/churny scenarios — see docs/ENGINE.md).
-Traffic accounting is computed in closed form from the partition table and
-matches the scalar engine's pubsub byte counters.
+LOSSY conditions (loss_prob/delay_prob > 0) run batched too: per-message
+fates come from the keyed counter-based stream (`fl/rounds.MessageFates`)
+that the scalar engine's pubsub reads one message at a time, so both
+engines see identical loss/delay decisions by construction. The engine
+pre-draws each round's fates as (A, K) mask/delay tensors and folds them
+into the contribution masks; delayed deltas ride a small ring buffer of
+in-flight delta windows (depth = max delay in rounds) that feeds the
+per-instance (mask, r, eps) table of the batched aggregation; lost/late
+replies become cache-update masks over an explicit (A, K, S) cache plane,
+so stale caches persist exactly as in the scalar engine. A tiny host-side
+state machine (pure integer/boolean numpy) mirrors the scalar fetch
+warm-up protocol so `bytes_total` / `messages_dropped` match the pubsub
+counters exactly. See docs/ENGINE.md.
+
+Scope: fixed membership (churn schedules still require the scalar oracle).
+Traffic accounting is computed in closed form (PERFECT) or by the mask
+stream (LOSSY) and matches the scalar engine's pubsub counters exactly.
 """
 from __future__ import annotations
 
@@ -48,7 +61,10 @@ import numpy as np
 from repro.core.partition import unflatten_params
 from repro.kernels.ipls_aggregate.ops import aggregate_batched
 from repro.models import mlp_mnist
-from repro.p2p.network import PERFECT
+
+# cache-event value sources (see _run_round_lossy)
+_KIND_START = 0  # holder value at the start of the serve round (fetch reply)
+_KIND_AGG = 1  # holder value after aggregation, pre-merge (UpdateModel reply)
 
 
 class VectorizedIPLSSimulation:
@@ -70,16 +86,14 @@ class VectorizedIPLSSimulation:
         self._use_kernel = (
             jax.default_backend() == "tpu" if use_kernel is None else use_kernel
         )
-        if cfg.conditions != PERFECT:
-            raise ValueError(
-                "engine='vectorized' supports PERFECT network conditions only; "
-                "use the scalar engine for lossy/delayed networks"
-            )
         if cfg.churn:
             raise ValueError(
                 "engine='vectorized' does not support churn schedules; "
                 "use the scalar engine"
             )
+        # imperfect connectivity runs batched through the mask-stream path
+        # (same gate as the scalar engine's keyed-fates installation)
+        self._lossy = cfg.conditions.loss_prob > 0 or cfg.conditions.delay_prob > 0
         self.cfg = cfg
         self.x_test, self.y_test = x_test, y_test
         # exact init state + init-phase traffic via the scalar constructor
@@ -111,6 +125,12 @@ class VectorizedIPLSSimulation:
         self._inst_k = np.asarray(inst_k, np.int32)
         self._inst_owner = np.asarray(inst_owner, np.int32)
         rho = np.asarray([len(h) for h in holders], np.int64)
+        self._rho = rho
+        self._holder_ids = holders
+        # (K, max_rho) instance id per (partition, replica slot); -1 pad
+        self._slot_inst = np.full((K, int(rho.max())), -1, np.int32)
+        for (k, j), i in inst_id.items():
+            self._slot_inst[k, j] = i
 
         # padded instance size: tail zeros flow through the batched kernel
         # untouched (0 - eps*0), so one shared width serves all partitions
@@ -134,16 +154,47 @@ class VectorizedIPLSSimulation:
             for h in holders[k]:
                 owner_col[h, k] = True
         self._owner_col = owner_col
+        self._bytes_total = self.net.pubsub.total_bytes()
+        # message counters mirroring the scalar pubsub (init-phase membership
+        # traffic included via the snapshot; the LOSSY path keeps them exact)
+        self.messages_sent = self.net.pubsub.messages_sent
+        self.messages_dropped = self.net.pubsub.messages_dropped
+
+        # ---- trainers: the scalar constructor's LocalTrainer objects own
+        # the per-agent RNG streams; drawing batches through their
+        # draw_batch() keeps both engines' SGD inputs identical by
+        # construction ----
+        self._trainers = [seed_sim.trainers[a] for a in range(A)]
+        bs = [min(cfg.batch_size, len(shards[a][0])) for a in range(A)]
+        # contiguous buckets of equal batch size (array_split shard sizes
+        # differ by at most one, so there are at most two)
+        self._buckets: List[Tuple[int, int, int]] = []
+        start = 0
+        for a in range(1, A + 1):
+            if a == A or bs[a] != bs[start]:
+                self._buckets.append((start, a, bs[start]))
+                start = a
+
+        # eval subset: shared stride helper => same agents as the scalar engine
+        from repro.fl.rounds import eval_subset
+
+        self._eval_idx = np.asarray(eval_subset(list(range(A)), cfg.eval_agents), np.int32)
+
+        if self._lossy:
+            self._init_lossy(seed_sim, V_pre, eps)
+            return
 
         # round-0 warm-up traffic (agents fetch partitions absent from both
         # their owned set and the donor caches left behind by joins)
-        fetch_bytes = 0
+        fetch_bytes = fetch_msgs = 0
         for a in range(A):
             ag = seed_sim.agents[a]
             for k in range(K):
                 if k not in ag.owned and k not in ag.cache:
                     fetch_bytes += 16 + 4 * int(sizes[k])
+                    fetch_msgs += 2  # the fetch and its reply
         self._round0_fetch_bytes = fetch_bytes
+        self._round0_fetch_msgs = fetch_msgs
 
         # steady-state per-round traffic: every agent updates every non-owned
         # partition (4*s_k up + 4*s_k reply) and each replica of a
@@ -151,7 +202,7 @@ class VectorizedIPLSSimulation:
         upd = int(np.sum((A - rho) * 4 * sizes))
         replica = int(np.sum(np.where(rho > 1, rho * 4 * sizes, 0)))
         self._round_bytes = 2 * upd + replica
-        self._bytes_total = self.net.pubsub.total_bytes()
+        self._round_msgs = 2 * int(np.sum(A - rho)) + int(np.sum(np.where(rho > 1, rho, 0)))
 
         # ---- per-phase routing tables (period = lcm of replication) -------
         # non-owner a targets H(k)[(round + a) % rho_k]; the pattern repeats
@@ -207,26 +258,6 @@ class VectorizedIPLSSimulation:
         self._V_merged = jnp.asarray(V_merged)
         self._eps = jnp.asarray(eps)
         self._last_phase = self._period - 1  # any phase: all replicas equal at init
-
-        # ---- trainers: the scalar constructor's LocalTrainer objects own
-        # the per-agent RNG streams; drawing batches through their
-        # draw_batch() keeps both engines' SGD inputs identical by
-        # construction ----
-        self._trainers = [seed_sim.trainers[a] for a in range(A)]
-        bs = [min(cfg.batch_size, len(shards[a][0])) for a in range(A)]
-        # contiguous buckets of equal batch size (array_split shard sizes
-        # differ by at most one, so there are at most two)
-        self._buckets: List[Tuple[int, int, int]] = []
-        start = 0
-        for a in range(1, A + 1):
-            if a == A or bs[a] != bs[start]:
-                self._buckets.append((start, a, bs[start]))
-                start = a
-
-        # eval subset: shared stride helper => same agents as the scalar engine
-        from repro.fl.rounds import eval_subset
-
-        self._eval_idx = np.asarray(eval_subset(list(range(A)), cfg.eval_agents), np.int32)
 
         self._build_jitted()
 
@@ -347,6 +378,412 @@ class VectorizedIPLSSimulation:
             for p in range(self._period)
         ]
 
+    # ===================== LOSSY (mask-stream) path ========================
+    def _init_lossy(self, seed_sim, V_pre, eps):
+        """State for the lossy-network batched path.
+
+        The protocol's per-parameter math stays in a handful of jitted
+        batched calls per round; what loss/delay add is a tiny host-side
+        control plane (integer/boolean numpy over (A, K)): the keyed fate
+        stream shared with the scalar pubsub, the fetch warm-up state
+        machine, and event queues for in-flight serves/arrivals/merges/
+        cache updates. Delayed deltas and the value tables late messages
+        read from live in small device-side history rings.
+        """
+        from repro.fl.rounds import TICKS_PER_ROUND
+
+        cfg = self.cfg
+        A, K, S = self.A, self.K, self.S
+        sizes, rho = self._sizes, self._rho
+        self._ticks = TICKS_PER_ROUND
+        cond = cfg.conditions
+        # delays are in tick units; a message delayed d ticks lands
+        # ceil(d / TICKS) rounds late at its drain point
+        self._Lu = (
+            -(-cond.max_delay_rounds // TICKS_PER_ROUND) if cond.delay_prob > 0 else 0
+        )
+        self._HD = self._Lu + 1  # history ring depth (value ages 0..Lu)
+        self._fates = seed_sim.fates
+        assert self._fates is not None, "lossy engine requires the keyed fate stream"
+
+        # per-round send counts/bytes are closed-form: loss only affects
+        # delivery, never whether an UpdateModel/replica message is sent
+        self._upd_msgs = int(np.sum(A - rho))
+        self._upd_bytes = int(np.sum((A - rho) * 4 * sizes))
+        pub_inst = np.nonzero(rho[self._inst_k] > 1)[0]
+        self._pub_msgs = int(len(pub_inst))
+        self._pub_bytes = int(np.sum(4 * sizes[self._inst_k[pub_inst]]))
+        # ordered (source -> destination) instance pairs for replica sync
+        src, dst = [], []
+        for k in range(K):
+            insts = np.nonzero(self._inst_k == k)[0]
+            if len(insts) <= 1:
+                continue
+            for i in insts:
+                for j in insts:
+                    if i != j:
+                        src.append(int(i))
+                        dst.append(int(j))
+        self._rep_src = np.asarray(src, np.int32)
+        self._rep_dst = np.asarray(dst, np.int32)
+        self._rep_src_agent = self._inst_owner[self._rep_src]
+        self._rep_dst_agent = self._inst_owner[self._rep_dst]
+        self._rep_k = self._inst_k[self._rep_src]
+
+        # W-assembly index into concat([V (K_inst rows), C (A*K rows)]):
+        # owners read their own instance value, everyone else their cache row
+        widx = np.zeros((A, K), np.int32)
+        inst_of = {
+            (int(self._inst_owner[i]), int(self._inst_k[i])): i
+            for i in range(self.K_inst)
+        }
+        for a in range(A):
+            for k in range(K):
+                widx[a, k] = inst_of.get((a, k), self.K_inst + a * K + k)
+        self._widx = widx
+
+        # explicit cache plane + fetch warm-up state, seeded from the scalar
+        # init (donor caches left behind by partition transfers). A slot
+        # stays at its last successfully delivered value — exactly the
+        # scalar cache-staleness semantics under loss.
+        C = np.zeros((A, K, S), np.float32)
+        has = np.zeros((A, K), bool)
+        for a in range(A):
+            for k, val in seed_sim.agents[a].cache.items():
+                C[a, k, : sizes[k]] = val
+                has[a, k] = True
+        self._has_cache = has
+        self._C = jnp.asarray(C)
+        self._Vl = jnp.asarray(V_pre)
+        self._eps_l = jnp.asarray(eps)
+        self._ver = np.zeros(self.K_inst, np.int64)
+        self._D_hist = jnp.zeros((self._Lu, A, self.N), jnp.float32)
+        self._Vagg_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
+        self._Vstart_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
+
+        # in-flight event queues, keyed by the round that consumes them
+        self._serve_q: Dict[int, list] = {}
+        self._arr_q: Dict[int, list] = {}
+        self._cache_q: Dict[int, list] = {}
+        self._merge_q: Dict[int, list] = {}
+        self._seq = 0
+        self._t = 0
+        # kernel-path contributor cap: owner + every other agent once per
+        # delta-age window
+        self.R_cap = 1 + (A - 1) * (self._Lu + 1)
+        self._build_jitted_lossy()
+
+    def _build_jitted_lossy(self):
+        cfg, layout = self.cfg, self.layout
+        A, K, N, S, K_inst = self.A, self.K, self.N, self.S, self.K_inst
+        Lu, HD = self._Lu, self._HD
+        sizes, offsets = self._sizes, self._offsets
+        alpha = float(cfg.alpha)
+        lr, iters = float(cfg.lr), int(cfg.local_iters)
+        layout_t = tuple((name, tuple(shape)) for name, shape in layout)
+        LA = (Lu + 1) * A
+        use_kernel = self._use_kernel
+        widx = jnp.asarray(self._widx)
+        widx_eval = jnp.asarray(self._widx[self._eval_idx])
+        inst_of_k = [np.nonzero(self._inst_k == k)[0] for k in range(K)]
+        inst_row0 = [int(rows[0]) if len(rows) else 0 for rows in inst_of_k]
+        off_inst = jnp.asarray(self._offsets[self._inst_k], jnp.int32)
+        size_inst = jnp.asarray(self._sizes[self._inst_k], jnp.int32)
+        x_te = jnp.asarray(self.x_test)
+        y_te = jnp.asarray(self.y_test)
+
+        def build_W(V, C, idx):
+            tbl = jnp.concatenate([V, C.reshape(A * K, S)], axis=0)
+            return jnp.concatenate(
+                [tbl[idx[:, k], : sizes[k]] for k in range(K)], axis=1
+            )
+
+        def pre(V, C, Vstart_hist, Vagg_hist, c0_mask, c0_src):
+            """Phase 0: roll the start-of-round value ring, apply the cache
+            updates the scalar engine would drain before LoadModel, and
+            assemble all agents' flat weights."""
+            Vstart_new = jnp.concatenate([V[None], Vstart_hist[:-1]], axis=0)
+            T0 = jnp.concatenate(
+                [Vstart_new.reshape(HD * K_inst, S), Vagg_hist.reshape(HD * K_inst, S)],
+                axis=0,
+            )
+            C0 = jnp.where(c0_mask[:, :, None], T0[c0_src], C)
+            W = build_W(V, C0, widx)
+            return Vstart_new, C0, W
+
+        def core(V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
+                 M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+            """Phases 2-3: aggregate every (partition, replica-slot) instance
+            from the current + in-flight delta windows, run the eps
+            recursion, version-filtered replica consensus, reply-driven
+            cache updates, batched eval, and roll the history rings."""
+            D_all = jnp.concatenate([D_now[None], D_hist], axis=0).reshape(LA, N)
+            eps_new = jnp.where(
+                r_vec > 0, alpha * eps + (1.0 - alpha) / jnp.maximum(r_vec, 1.0), eps
+            )
+            if use_kernel:
+                # TPU: gather the contributor rows (current + ring-buffer
+                # ages) into the (K_inst, R, S) layout of the batched kernel;
+                # the kernel computes w - eps*masked_mean, so it gets eps*r
+                lane = jnp.arange(S, dtype=jnp.int32)
+                valid = lane[None, :] < size_inst[:, None]
+                col = jnp.where(valid, off_inst[:, None] + lane[None, :], 0)
+                G = D_all[kidx[:, :, None], col[:, None, :]]
+                G = G * valid[:, None, :]
+                V_agg = aggregate_batched(V, G, kmask, eps_new * r_vec)
+            else:
+                # CPU/GPU: K masked matmuls over the stacked delta windows
+                V_agg = V
+                for k in range(K):
+                    rows = inst_of_k[k]
+                    Mk = M_all[inst_row0[k] : inst_row0[k] + len(rows)]
+                    Dk = jax.lax.dynamic_slice(
+                        D_all, (0, int(offsets[k])), (LA, int(sizes[k]))
+                    )
+                    agg_k = Mk @ Dk
+                    upd = V[rows, : sizes[k]] - eps_new[rows, None] * agg_k
+                    V_agg = V_agg.at[rows, : sizes[k]].set(upd)
+            # replica consensus: mean of self + version-kept arrived values
+            # (late values read the post-aggregate ring at their send age)
+            Vm_src = jnp.concatenate([V_agg[None], Vagg_hist[: HD - 1]], axis=0)
+            contrib = jnp.einsum("lij,ljs->is", Gm, Vm_src)
+            V_new = (V_agg + contrib) / (1.0 + merge_cnt)[:, None]
+            # phase-2 cache updates (may reference this round's post-agg table)
+            T2 = jnp.concatenate(
+                [
+                    Vstart_new.reshape(HD * K_inst, S),
+                    Vagg_hist.reshape(HD * K_inst, S),
+                    V_agg,
+                ],
+                axis=0,
+            )
+            C2 = jnp.where(c2_mask[:, :, None], T2[c2_src], C0)
+            # evaluate the sub-sampled agents on end-of-round state
+            tbl_eval = jnp.concatenate([V_new, C2.reshape(A * K, S)], axis=0)
+            W_eval = jnp.concatenate(
+                [tbl_eval[widx_eval[:, k], : sizes[k]] for k in range(K)], axis=1
+            )
+            accs = jax.vmap(
+                lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
+            )(W_eval)
+            # roll the rings
+            D_hist_new = jnp.concatenate([D_now[None], D_hist], axis=0)[:Lu]
+            Vagg_hist_new = jnp.concatenate([V_agg[None], Vagg_hist[:-1]], axis=0)
+            return V_new, eps_new, C2, D_hist_new, Vagg_hist_new, accs
+
+        self._lossy_pre_j = jax.jit(pre, donate_argnums=(1,))
+        self._lossy_core_j = jax.jit(core, donate_argnums=(0, 1, 2, 4, 5))
+        self._batched_deltas_keep = jax.jit(
+            lambda W, X, Y: jax.vmap(
+                lambda w, x, y: w - mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t)
+            )(W, X, Y)
+        )
+
+    def _push_cache_event(self, deliver_ctr, send_ctr, a, k, kind, src_round, inst):
+        """Schedule a cache write for the round whose drain sees the message.
+        The sort key (deliver_ctr, send_ctr, serving holder id, seq)
+        reproduces the scalar inbox order — messages delivered at the same
+        tick sit in send order, and within one send phase the scalar engine
+        loops holders in agent-id order — so when several replies race for
+        one (agent, partition) cache slot the same one wins in both engines.
+        (Replies from the SAME holder in the same phase carry identical
+        values, so their relative order is immaterial.)"""
+        holder = int(self._inst_owner[inst])
+        self._cache_q.setdefault(deliver_ctr // self._ticks, []).append(
+            (deliver_ctr, send_ctr, holder, self._seq, a, k, kind, src_round, inst)
+        )
+        self._seq += 1
+
+    def _run_round_lossy(self, rnd: int) -> dict:
+        from repro.fl.rounds import (
+            CH_FETCH,
+            CH_FETCH_REPLY,
+            CH_REPLICA,
+            CH_UPDATE,
+            CH_UPDATE_REPLY,
+        )
+
+        t = self._t
+        TICKS = self._ticks
+        f = self._fates
+        A, K, K_inst = self.A, self.K, self.K_inst
+        Lu, HD = self._Lu, self._HD
+        sizes = self._sizes
+        owner = self._owner_col
+        rho = self._rho
+        msgs = drops = nbytes = 0
+        a_col = np.arange(A)[:, None]
+        k_row = np.arange(K)[None, :]
+        # routing: non-owner a targets replica slot (rnd + a) % rho_k
+        slot = (rnd + a_col) % rho[None, :]
+        tgt_inst = self._slot_inst[np.broadcast_to(k_row, (A, K)), slot]
+
+        def lat_rounds(d):
+            return -(-d // TICKS)
+
+        # ---- phase 0: fetch requests for partitions never yet cached ------
+        need = (~owner) & (~self._has_cache)
+        n_need = int(need.sum())
+        if n_need:
+            de, dl = f.draw(CH_FETCH, t, a_col, k_row)
+            msgs += n_need
+            nbytes += 16 * n_need
+            drops += int((need & ~de).sum())
+            lat = lat_rounds(dl)
+            for a, k in np.argwhere(need & de):
+                self._serve_q.setdefault(t + int(lat[a, k]), []).append(
+                    (t, int(a), int(k), int(tgt_inst[a, k]))
+                )
+
+        # ---- phase 1: holders serve the fetches that arrived --------------
+        for send_r, a, k, inst in self._serve_q.pop(t, []):
+            de1, d1 = f.draw_one(CH_FETCH_REPLY, t, a, k, int(self._inst_owner[inst]))
+            msgs += 1
+            nbytes += 4 * int(sizes[k])
+            if de1:
+                self._push_cache_event(
+                    TICKS * t + 1 + d1, TICKS * t + 1, a, k, _KIND_START, t, inst
+                )
+            else:
+                drops += 1
+
+        # ---- phase 2: UpdateModel sends -----------------------------------
+        de_u, dl_u = f.draw(CH_UPDATE, t, a_col, k_row)
+        nonown = ~owner
+        msgs += self._upd_msgs
+        nbytes += self._upd_bytes
+        drops += int((nonown & ~de_u).sum())
+        lat_u = lat_rounds(dl_u)
+        for a, k in np.argwhere(nonown & de_u):
+            self._arr_q.setdefault(t + int(lat_u[a, k]), []).append(
+                (t, int(a), int(k), int(tgt_inst[a, k]))
+            )
+
+        # ---- arrivals => contribution masks + UpdateModel replies ---------
+        arrivals = self._arr_q.pop(t, [])
+        M_all = np.zeros((K_inst, (Lu + 1) * A), np.float32)
+        M_all[np.arange(K_inst), self._inst_owner] = 1.0  # owner self-delta
+        for send_r, a, k, inst in arrivals:
+            M_all[inst, (t - send_r) * A + a] = 1.0
+        r_vec = M_all.sum(axis=1)
+        if arrivals:
+            arr = np.asarray([(a, k, i) for (_, a, k, i) in arrivals], np.int64)
+            de_r, d_r = f.draw(
+                CH_UPDATE_REPLY, t, arr[:, 0], arr[:, 1], self._inst_owner[arr[:, 2]]
+            )
+            msgs += len(arrivals)
+            nbytes += int(np.sum(4 * sizes[arr[:, 1]]))
+            drops += int((~de_r).sum())
+            for j in np.nonzero(de_r)[0]:
+                self._push_cache_event(
+                    TICKS * t + 3 + int(d_r[j]), TICKS * t + 3,
+                    int(arr[j, 0]), int(arr[j, 1]), _KIND_AGG, t, int(arr[j, 2]),
+                )
+
+        # version bumps where anything aggregated (owner always contributes
+        # under fixed membership; keep the general rule anyway)
+        ver_after = self._ver + (r_vec > 0).astype(np.int64)
+
+        # ---- replica publishes --------------------------------------------
+        if len(self._rep_src):
+            msgs += self._pub_msgs
+            nbytes += self._pub_bytes
+            de_p, dl_p = f.draw(
+                CH_REPLICA, t, self._rep_src_agent, self._rep_k, self._rep_dst_agent
+            )
+            drops += int((~de_p).sum())
+            lat_p = lat_rounds(dl_p)
+            for j in np.nonzero(de_p)[0]:
+                si, di = int(self._rep_src[j]), int(self._rep_dst[j])
+                self._merge_q.setdefault(t + int(lat_p[j]), []).append(
+                    (t, si, di, int(ver_after[si]))
+                )
+
+        # ---- merge set: version-filtered replica values due this round ----
+        Gm = np.zeros((HD, K_inst, K_inst), np.float32)
+        cnt = np.zeros(K_inst, np.float32)
+        for send_r, si, di, ver_sent in self._merge_q.pop(t, []):
+            if ver_sent >= ver_after[di]:
+                Gm[t - send_r, di, si] += 1.0
+                cnt[di] += 1.0
+        self._ver = ver_after
+
+        # ---- cache-update batches (phase-0 / phase-2 drains) --------------
+        c0_mask = np.zeros((A, K), bool)
+        c0_src = np.zeros((A, K), np.int32)
+        c2_mask = np.zeros((A, K), bool)
+        c2_src = np.zeros((A, K), np.int32)
+        for ctr, _sc, _holder, _seq, a, k, kind, src_r, inst in sorted(self._cache_q.pop(t, [])):
+            if kind == _KIND_START:
+                idx = (t - src_r) * K_inst + inst
+            elif src_r < t:
+                idx = HD * K_inst + (t - src_r - 1) * K_inst + inst
+            else:
+                idx = 2 * HD * K_inst + inst
+            if ctr % TICKS <= 1:
+                c0_mask[a, k] = True
+                c0_src[a, k] = idx
+            else:
+                c2_mask[a, k] = True
+                c2_src[a, k] = idx
+            self._has_cache[a, k] = True  # suppresses fetches from round t+1
+
+        # ---- device calls -------------------------------------------------
+        xs, ys = self._draw_batches()
+        Vstart_new, C0, W = self._lossy_pre_j(
+            self._Vl, self._C, self._Vstart_hist, self._Vagg_hist,
+            jnp.asarray(c0_mask), jnp.asarray(c0_src),
+        )
+        if len(self._buckets) == 1:
+            D_now = self._batched_deltas_keep(
+                W, jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+            )
+        else:
+            parts = [
+                self._batched_deltas_keep(
+                    W[lo:hi],
+                    jnp.asarray(np.stack(xs[lo:hi])),
+                    jnp.asarray(np.stack(ys[lo:hi])),
+                )
+                for lo, hi, _ in self._buckets
+            ]
+            D_now = jnp.concatenate(parts, axis=0)
+        if self._use_kernel:
+            kidx = np.zeros((K_inst, self.R_cap), np.int32)
+            kmask = np.zeros((K_inst, self.R_cap), np.float32)
+            for i in range(K_inst):
+                rows = np.nonzero(M_all[i])[0]
+                kidx[i, : len(rows)] = rows
+                kmask[i, : len(rows)] = 1.0
+        else:
+            kidx = np.zeros((1, 1), np.int32)
+            kmask = np.zeros((1, 1), np.float32)
+        (
+            self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist, accs
+        ) = self._lossy_core_j(
+            self._Vl, self._eps_l, C0, D_now, self._D_hist, self._Vagg_hist,
+            Vstart_new, jnp.asarray(M_all), jnp.asarray(r_vec), jnp.asarray(Gm),
+            jnp.asarray(cnt), jnp.asarray(c2_mask), jnp.asarray(c2_src),
+            jnp.asarray(kidx), jnp.asarray(kmask),
+        )
+        self._Vstart_hist = Vstart_new
+        self._t = t + 1
+
+        self.messages_sent += msgs
+        self.messages_dropped += drops
+        self._bytes_total += nbytes
+        accs = np.asarray(accs, np.float32)
+        metrics = {
+            "acc_mean": float(accs.mean()),
+            "acc_std": float(accs.std()),
+            "acc_max": float(accs.max()),
+            "round": rnd,
+            "active": A,
+            "bytes_total": self._bytes_total,
+        }
+        self.history.append(metrics)
+        return metrics
+
     # -- one round ----------------------------------------------------------
     def _draw_batches(self):
         xs, ys = [], []
@@ -357,6 +794,8 @@ class VectorizedIPLSSimulation:
         return xs, ys
 
     def run_round(self, rnd: int) -> dict:
+        if self._lossy:
+            return self._run_round_lossy(rnd)
         xs, ys = self._draw_batches()
         p = rnd % self._period
         p_prev = self._last_phase
@@ -391,6 +830,11 @@ class VectorizedIPLSSimulation:
         self._bytes_total += self._round_bytes + (
             self._round0_fetch_bytes if rnd == 0 else 0
         )
+        # keep the pubsub-mirroring counters live on the PERFECT path too
+        # (nothing drops under PERFECT conditions)
+        self.messages_sent += self._round_msgs + (
+            self._round0_fetch_msgs if rnd == 0 else 0
+        )
         metrics = {
             "acc_mean": float(accs.mean()),
             "acc_std": float(accs.std()),
@@ -412,6 +856,19 @@ class VectorizedIPLSSimulation:
         """The (A, N) matrix of per-agent assembled models, equal to what
         each scalar agent's `load_model()` would return (reconstructed from
         the value tables and the last round's routing)."""
+        if self._lossy:
+            tbl = np.concatenate(
+                [
+                    np.asarray(self._Vl),
+                    np.asarray(self._C).reshape(self.A * self.K, self.S),
+                ],
+                axis=0,
+            )
+            W = np.zeros((self.A, self.N), np.float32)
+            for k in range(self.K):
+                off, s = self._offsets[k], self._sizes[k]
+                W[:, off : off + s] = tbl[self._widx[:, k], :s]
+            return W
         V_all = np.concatenate(
             [np.asarray(self._V_pre), np.asarray(self._V_merged)], axis=0
         )

@@ -11,15 +11,22 @@ Two variants:
   * ``ipls_aggregate``       — one partition:  w (N,), deltas (R, N);
   * ``ipls_aggregate_batched`` — all K partitions a holder owns in ONE
     launch: w (K, N), deltas (K, R, N), with a per-partition
-    ``[mask(R), r, eps]`` table, grid spanning (K, row-tiles). The
-    vectorized round engine flattens every (partition, replica-slot)
+    ``[mask(R), r, eps]`` table, grid spanning (K, row-tiles, R-tiles).
+    The vectorized round engine flattens every (partition, replica-slot)
     instance of a training round into this layout, so a whole round's
     aggregation is a single kernel call instead of K numpy reductions.
+    Rows with an all-zero mask (zero-contributor rounds — possible under
+    lossy networks) pass through unchanged.
 
 Tiling: the flat partition is viewed as (rows, 128) lanes; each grid step
 owns a (BR, 128) tile (BR=256 rows => 128 KiB f32 per delta in VMEM; with
 R<=16 contributors the working set stays ~2 MiB << 16 MiB VMEM). The batched
-variant uses BR=128 to cut per-partition padding waste.
+variant uses BR=128 to cut per-partition padding waste, and tiles the
+contributor axis in chunks of R_TILE so variable-r instance tables (lossy
+rounds can carry 1 + (A-1) * (1 + max_delay) contributor slots) neither
+unroll into huge kernel bodies nor blow the VMEM budget: the grid's last
+axis walks R-chunks sequentially and accumulates into the revisited output
+block, applying the ``w - eps * masked_mean`` update on the final chunk.
 
 ``interpret`` defaults to auto-detection: interpret-mode (CPU emulation of
 the kernel body) everywhere except on a real TPU backend.
@@ -35,6 +42,7 @@ from jax.experimental import pallas as pl
 BR = 256  # tile rows; lanes fixed at 128
 BR_BATCHED = 128  # smaller tile for the partition-batched grid (less padding)
 LANES = 128
+R_TILE = 8  # contributor-slot chunk per grid step of the batched variant
 
 
 def default_interpret() -> bool:
@@ -91,18 +99,38 @@ def ipls_aggregate(w, deltas, mask, eps, interpret: bool | None = None):
 
 
 def _kernel_batched(table_ref, w_ref, deltas_ref, out_ref):
-    # table_ref: (1, R+2) per-partition [mask(R), r_count, eps]
-    # w_ref: (1, BR_BATCHED, 128); deltas_ref: (1, R, BR_BATCHED, 128)
+    # table_ref: (1, Rp+2) per-partition [mask(Rp), r_count, eps]; Rp is the
+    # R_TILE-padded contributor count. w_ref: (1, BR_BATCHED, 128);
+    # deltas_ref: (1, R_TILE, BR_BATCHED, 128) — one R-chunk per grid step.
+    # The grid's last axis walks the R-chunks sequentially, accumulating the
+    # masked delta sum into the revisited output block; the final chunk
+    # applies w - eps * acc / r.
+    rt = pl.program_id(2)
+    n_rt = pl.num_programs(2)
     me = table_ref[0]
-    R = deltas_ref.shape[1]
-    mask = me[:R]
-    r_count = me[R]
-    eps = me[R + 1]
+    Rp = me.shape[0] - 2
+    RT = deltas_ref.shape[1]
+    mask_blk = jax.lax.dynamic_slice(me, (rt * RT,), (RT,))
+    r_count = me[Rp]
+    eps = me[Rp + 1]
     acc = jnp.zeros(w_ref.shape[1:], jnp.float32)
-    for r in range(R):  # static unroll
-        acc = acc + mask[r] * deltas_ref[0, r].astype(jnp.float32)
-    inv = jnp.where(r_count > 0, 1.0 / jnp.maximum(r_count, 1.0), 0.0)
-    out_ref[0] = (w_ref[0].astype(jnp.float32) - eps * acc * inv).astype(out_ref.dtype)
+    for r in range(RT):  # static unroll of one chunk
+        acc = acc + mask_blk[r] * deltas_ref[0, r].astype(jnp.float32)
+
+    @pl.when(rt == 0)
+    def _():
+        out_ref[0] = acc.astype(out_ref.dtype)
+
+    @pl.when(rt > 0)
+    def _():
+        out_ref[0] = (out_ref[0].astype(jnp.float32) + acc).astype(out_ref.dtype)
+
+    @pl.when(rt == n_rt - 1)
+    def _():
+        inv = jnp.where(r_count > 0, 1.0 / jnp.maximum(r_count, 1.0), 0.0)
+        out_ref[0] = (
+            w_ref[0].astype(jnp.float32) - eps * out_ref[0].astype(jnp.float32) * inv
+        ).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -111,37 +139,43 @@ def ipls_aggregate_batched(w, deltas, mask, eps, interpret: bool | None = None):
 
     w: (K, N), deltas: (K, R, N), mask: (K, R), eps: (K,). Each partition k
     gets ``w[k] - eps[k] * masked_mean(deltas[k], mask[k])``; partitions with
-    an all-zero mask row pass through unchanged. Partitions of unequal true
-    size share the padded N; callers zero-pad tails (the padded lanes compute
+    an all-zero mask row (r = 0) pass through unchanged. R is variable at
+    the call site (lossy rounds shrink/grow the contributor table per round)
+    and is padded to a multiple of R_TILE with zero mask rows; the grid
+    walks R-chunks so large contributor tables neither unroll into huge
+    kernel bodies nor exceed VMEM. Partitions of unequal true size share
+    the padded N; callers zero-pad tails (the padded lanes compute
     garbage-free zeros since pad(w)=pad(deltas)=0).
     """
     if interpret is None:
         interpret = default_interpret()
     K, N = w.shape
     R = deltas.shape[1]
+    rpad = (-R) % R_TILE
     tile = BR_BATCHED * LANES
     pad = (-N) % tile
     wp = jnp.pad(w, ((0, 0), (0, pad)))
-    dp = jnp.pad(deltas, ((0, 0), (0, 0), (0, pad)))
+    dp = jnp.pad(deltas, ((0, 0), (0, rpad), (0, pad)))
     rows = (N + pad) // LANES
+    Rp = R + rpad
     w3 = wp.reshape(K, rows, LANES)
-    d4 = dp.reshape(K, R, rows, LANES)
-    mask_f = mask.astype(jnp.float32)
+    d4 = dp.reshape(K, Rp, rows, LANES)
+    mask_f = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, rpad)))
     table = jnp.concatenate(
         [mask_f, jnp.sum(mask_f, axis=1, keepdims=True), eps.astype(jnp.float32)[:, None]],
         axis=1,
-    )  # (K, R+2)
-    grid = (K, rows // BR_BATCHED)
+    )  # (K, Rp+2)
+    grid = (K, rows // BR_BATCHED, Rp // R_TILE)
 
     out = pl.pallas_call(
         _kernel_batched,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, R + 2), lambda k, i: (k, 0)),
-            pl.BlockSpec((1, BR_BATCHED, LANES), lambda k, i: (k, i, 0)),
-            pl.BlockSpec((1, R, BR_BATCHED, LANES), lambda k, i: (k, 0, i, 0)),
+            pl.BlockSpec((1, Rp + 2), lambda k, i, rt: (k, 0)),
+            pl.BlockSpec((1, BR_BATCHED, LANES), lambda k, i, rt: (k, i, 0)),
+            pl.BlockSpec((1, R_TILE, BR_BATCHED, LANES), lambda k, i, rt: (k, rt, i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BR_BATCHED, LANES), lambda k, i: (k, i, 0)),
+        out_specs=pl.BlockSpec((1, BR_BATCHED, LANES), lambda k, i, rt: (k, i, 0)),
         out_shape=jax.ShapeDtypeStruct((K, rows, LANES), w.dtype),
         interpret=interpret,
     )(table, w3, d4)

@@ -26,7 +26,9 @@ def ipls_aggregate_batched_ref(
     eps: jax.Array,      # (K,) staleness weight per partition
 ) -> jax.Array:
     """Per-partition ``w - eps * masked_mean(deltas)``; all-zero mask rows
-    leave their partition unchanged."""
+    (zero-contributor rounds, possible under lossy networks) leave their
+    partition unchanged. R is whatever the round's contributor table needs —
+    the kernel pads it to R_TILE chunks, the oracle takes it as-is."""
     mask = mask.astype(jnp.float32)
     r = jnp.sum(mask, axis=1)
     agg = jnp.einsum("kr,krn->kn", mask, deltas.astype(jnp.float32))

@@ -79,6 +79,21 @@ class PubSub:
         self.messages_sent = 0
         self.messages_dropped = 0
         self._offline: set[int] = set()
+        # optional keyed fate source: (topic, sender, recipient, payload,
+        # round) -> (delivered, delay). When set, per-message loss/delay is
+        # a pure function of the message's coordinates instead of the shared
+        # sequential rng — the round engines install this so the scalar and
+        # vectorized data planes draw identical fates (see
+        # fl/rounds.MessageFates). When None, the legacy sequential
+        # Generator stream is used.
+        self.fate_source: Optional[
+            Callable[[str, int, int, Any, int], Tuple[bool, int]]
+        ] = None
+
+    def _fate(self, topic: str, sender: int, recipient: int, payload: Any) -> Tuple[bool, int]:
+        if self.fate_source is not None:
+            return self.fate_source(topic, sender, recipient, payload, self.round)
+        return self.conditions.sample(self.rng)
 
     # -- membership of the transport --------------------------------------
     def subscribe(self, topic: str, agent: int) -> None:
@@ -109,7 +124,7 @@ class PubSub:
         for agent in self._subs[topic]:
             if agent == sender:
                 continue
-            delivered, delay = self.conditions.sample(self.rng)
+            delivered, delay = self._fate(topic, sender, agent, payload)
             if not delivered or agent in self._offline:
                 self.messages_dropped += 1
                 continue
@@ -132,7 +147,7 @@ class PubSub:
             return
         self.messages_sent += 1
         self.bytes_sent[sender] += nbytes
-        delivered, delay = self.conditions.sample(self.rng)
+        delivered, delay = self._fate(topic, sender, recipient, payload)
         if not delivered or recipient in self._offline:
             self.messages_dropped += 1
             return
@@ -169,8 +184,10 @@ class PubSub:
         if not topic_prefix:
             out, self._inbox[agent] = box, []
             return out
-        out = [m for m in box if topic_prefix in m.topic]
-        self._inbox[agent] = [m for m in box if topic_prefix not in m.topic]
+        # true prefix semantics: substring matching would cross-drain any
+        # topic embedding another topic's name mid-string
+        out = [m for m in box if m.topic.startswith(topic_prefix)]
+        self._inbox[agent] = [m for m in box if not m.topic.startswith(topic_prefix)]
         return out
 
     def total_bytes(self) -> int:

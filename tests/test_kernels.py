@@ -27,6 +27,26 @@ def test_ipls_aggregate(N, R, dtype):
     )
 
 
+# variable-r instance tables: R spans multiple R_TILE chunks of the batched
+# grid (lossy rounds carry up to 1 + (A-1)*(1+max_delay) contributor slots)
+# and zero-contributor rows must pass through bit-exactly
+@pytest.mark.parametrize("R", [7, 8, 9, 23])
+def test_ipls_aggregate_batched_variable_r(R):
+    from repro.kernels.ipls_aggregate.ops import aggregate_batched
+    from repro.kernels.ipls_aggregate.ref import ipls_aggregate_batched_ref
+
+    K, N = 5, 4097
+    w = jnp.asarray(RNG.standard_normal((K, N)), jnp.float32)
+    d = jnp.asarray(RNG.standard_normal((K, R, N)), jnp.float32)
+    m = jnp.asarray(RNG.integers(0, 2, (K, R)), jnp.float32)
+    m = m.at[3].set(0.0)  # zero-contributor round
+    eps = jnp.asarray(RNG.uniform(0.1, 1.0, K), jnp.float32)
+    got = aggregate_batched(w, d, m, eps)
+    ref = ipls_aggregate_batched_ref(w, d, m, eps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(w[3]))
+
+
 # --- flash attention ---------------------------------------------------------
 @pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 2, 256, 128), (1, 1, 384, 32)])
 @pytest.mark.parametrize("causal", [True, False])

@@ -72,3 +72,40 @@ def test_traffic_accounting():
     ps.tick(); ps.drain(2)
     assert ps.bytes_sent[1] == 100
     assert ps.bytes_recv[2] == 100
+
+
+def test_drain_prefix_is_prefix_not_substring():
+    """drain(topic_prefix=...) must use startswith semantics: a topic
+    embedding another topic's name mid-string must not be cross-drained."""
+    ps = PubSub(PERFECT, seed=0)
+    for topic in ("ipls/reply", "shadow/ipls/reply", "ipls/reply/sub"):
+        ps.subscribe(topic, 2)
+        ps.publish(topic, 1, topic, nbytes=4)
+    ps.tick()
+    got = ps.drain(2, "ipls/reply")
+    assert sorted(m.topic for m in got) == ["ipls/reply", "ipls/reply/sub"]
+    rest = ps.drain(2)
+    assert [m.topic for m in rest] == ["shadow/ipls/reply"]
+
+
+def test_sample_stream_keyed_determinism():
+    """Counter-based fates are order-free: any subset of keys drawn in any
+    order (or one at a time) reads identical values, and the distribution
+    respects the loss/delay caps."""
+    cond = NetworkConditions(loss_prob=0.3, delay_prob=0.4, max_delay_rounds=3)
+    rounds, agents, parts = np.meshgrid(
+        np.arange(5), np.arange(7), np.arange(4), indexing="ij"
+    )
+    de, dl = cond.sample_stream(123, 2, rounds, agents, parts)
+    # scalar lookups in scrambled order agree elementwise
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        i, j, k = rng.integers(5), rng.integers(7), rng.integers(4)
+        de1, dl1 = cond.sample_stream(123, 2, int(rounds[i, j, k]), int(agents[i, j, k]), int(parts[i, j, k]))
+        assert bool(de1) == de[i, j, k] and int(dl1) == dl[i, j, k]
+    assert 0 < de.sum() < de.size            # losses happened
+    assert dl.max() <= 3 and dl.min() == 0   # capped geometric
+    assert np.all(dl[~de] == 0)
+    # a different channel/seed decorrelates
+    de2, _ = cond.sample_stream(123, 3, rounds, agents, parts)
+    assert not np.array_equal(de, de2)

@@ -26,6 +26,97 @@ def test_end_to_end_ipls_training():
     assert sim.net.pubsub.total_bytes() > 0
 
 
+def test_crash_with_rho1_partition_keeps_updating():
+    """Regression: a crash with rho=1 orphans partitions; the table
+    reassigns them but the data plane must seed the new holder with a
+    PartitionState (from a replica, its own cache, or zeros) — otherwise
+    every delta for the partition is dropped and it freezes at stale cache
+    values for the rest of the run."""
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=1500, num_test=300, seed=2)
+    shards = iid_split(x_tr, y_tr, 4, seed=2)
+    cfg = SimConfig(
+        num_agents=4, num_partitions=8, pi=2, rho=1, rounds=6,
+        local_iters=3, churn={2: [(1, "crash")]},
+    )
+    sim = IPLSSimulation(cfg, shards, x_te, y_te)
+    orphaned = sim.table.partitions_of(1)
+    assert orphaned  # the victim actually held partitions
+    for rnd in range(3):
+        sim.run_round(rnd)
+    # every partition has a holder with live data-plane state again
+    versions = {}
+    for k in range(cfg.num_partitions):
+        holders = sim.table.holders_of(k)
+        assert holders, f"partition {k} orphaned"
+        h = holders[0]
+        assert k in sim.agents[h].owned, f"holder {h} has no PartitionState for {k}"
+        versions[k] = (h, sim.agents[h].owned[k].version)
+    for rnd in range(3, cfg.rounds):
+        sim.run_round(rnd)
+    # the reassigned partitions kept aggregating after the crash
+    for k in orphaned:
+        h, v_before = versions[k]
+        v_after = sim.agents[h].owned[k].version
+        assert v_after > v_before, f"partition {k} froze after the crash"
+
+
+def test_joined_agent_contributes_deltas():
+    """Regression: a "join" churn action must hand the new agent a data
+    shard — otherwise run_round skips its training forever and holders
+    never see a delta from it."""
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=1500, num_test=300, seed=3)
+    shards = iid_split(x_tr, y_tr, 3, seed=3)
+    joiner = 7
+    cfg = SimConfig(
+        num_agents=3, num_partitions=6, pi=2, rho=2, rounds=5,
+        local_iters=3, churn={2: [(joiner, "join")]},
+    )
+    sim = IPLSSimulation(cfg, shards, x_te, y_te)
+    hist = sim.run()
+    assert joiner in sim.trainers  # got a shard
+    # its deltas went over the wire and holders replied with fresh values
+    assert sim.net.pubsub.bytes_sent[joiner] > 0
+    assert len(sim.agents[joiner].cache) + len(sim.agents[joiner].owned) > 0
+    assert sim.net.pubsub.bytes_recv[joiner] > 0
+    assert hist[-1]["active"] == 4
+    # the joiner's replicas inherited the incumbents' version, so replica
+    # consensus stays two-directional (equal versions every round after)
+    for k in sim.table.partitions_of(joiner):
+        versions = {sim.agents[h].owned[k].version for h in sim.table.holders_of(k)}
+        assert len(versions) == 1, (k, versions)
+
+
+def test_merge_replicas_discards_stale_versions():
+    """A replica value published in an earlier round (delayed delivery)
+    carries an older version and must not be mean-merged next to fresh
+    values; same-or-newer versions merge as before."""
+    from repro.core.api import IPLSAgent, REPLICA_TOPIC, reset_registry
+    from repro.core.partition import PartitionSpec, PartitionTable
+    from repro.p2p.ipfs_sim import SimIPFS
+
+    reset_registry()
+    net = SimIPFS()
+    table = PartitionTable(2, 2, 2)
+    spec = PartitionSpec.even(8, 2)
+    a0 = IPLSAgent(0, net, table, spec)
+    a0.init(np.zeros(8, np.float32))
+    a1 = IPLSAgent(1, net, table, spec)
+    a1.init()  # replicates both partitions (pi=2, rho=2)
+    k = 0
+    assert k in a0.owned and k in a1.owned
+    a1.owned[k].version = 2
+    v_before = a1.owned[k].value.copy()
+    stale = np.full(spec.sizes[k], 9.0, np.float32)
+    net.pubsub.publish(f"{REPLICA_TOPIC}/{k}", 0, (k, stale, 1), nbytes=16)
+    net.tick()
+    a1.merge_replicas()
+    np.testing.assert_array_equal(a1.owned[k].value, v_before)  # stale: discarded
+    net.pubsub.publish(f"{REPLICA_TOPIC}/{k}", 0, (k, stale, 2), nbytes=16)
+    net.tick()
+    a1.merge_replicas()
+    np.testing.assert_allclose(a1.owned[k].value, 0.5 * (v_before + stale))
+
+
 def test_end_to_end_datacenter_train_step():
     """Build the full launcher path (model -> shardings -> jit) on the
     1-device smoke mesh with a reduced arch, run 3 real steps, loss drops."""

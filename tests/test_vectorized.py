@@ -1,9 +1,10 @@
 """Two-engine equivalence + partition-batched aggregation kernel.
 
 The vectorized engine must reproduce the scalar engine's per-round dataflow
-exactly under PERFECT conditions (same routing, same eps recursion, same
-pre-merge reply caching); any residual difference is float noise from
-batched vs per-agent device ops.
+exactly — under PERFECT conditions and under LOSSY ones, where both engines
+read per-message fates from the same keyed counter-based stream (same
+routing, same loss/delay decisions, same eps recursion, same reply caching);
+any residual difference is float noise from batched vs per-agent device ops.
 """
 import dataclasses
 
@@ -13,7 +14,7 @@ import pytest
 
 from repro.data import iid_split, synth_mnist
 from repro.fl import IPLSSimulation, SimConfig, make_simulation
-from repro.p2p.network import LOSSY
+from repro.p2p.network import LOSSY, NetworkConditions
 
 RNG = np.random.default_rng(3)
 
@@ -34,6 +35,18 @@ def _run_both(data, **kw):
     return sim_s, hist_s, sim_v, hist_v
 
 
+def _assert_equivalent(sim_s, hist_s, sim_v, hist_v, num_agents, atol_w=1e-4):
+    for ms, mv in zip(hist_s, hist_v):
+        assert ms["round"] == mv["round"] and ms["active"] == mv["active"]
+        assert ms["bytes_total"] == mv["bytes_total"]
+        np.testing.assert_allclose(ms["acc_mean"], mv["acc_mean"], atol=5e-3)
+    # pubsub-mirroring counters stay live on both engine paths
+    assert sim_s.net.pubsub.messages_sent == sim_v.messages_sent
+    assert sim_s.net.pubsub.messages_dropped == sim_v.messages_dropped
+    w_s = np.stack([sim_s.agents[a].load_model() for a in range(num_agents)])
+    np.testing.assert_allclose(w_s, sim_v.agent_weights(), atol=atol_w)
+
+
 @pytest.mark.parametrize(
     "kw",
     [
@@ -46,21 +59,75 @@ def _run_both(data, **kw):
 )
 def test_engines_equivalent_under_perfect(data, kw):
     sim_s, hist_s, sim_v, hist_v = _run_both(data, **kw)
-    for ms, mv in zip(hist_s, hist_v):
-        assert ms["round"] == mv["round"] and ms["active"] == mv["active"]
-        # identical routing => identical traffic, to the byte
-        assert ms["bytes_total"] == mv["bytes_total"]
-        np.testing.assert_allclose(ms["acc_mean"], mv["acc_mean"], atol=5e-3)
-    w_s = np.stack([sim_s.agents[a].load_model() for a in range(kw["num_agents"])])
+    _assert_equivalent(sim_s, hist_s, sim_v, hist_v, kw["num_agents"])
+
+
+# acceptance bar for the lossy-network vectorization: batched and scalar
+# engines agree round-by-round across seeds — weights to float tolerance,
+# messages_dropped / bytes_total exactly
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engines_equivalent_under_lossy(data, seed):
+    sim_s, hist_s, sim_v, hist_v = _run_both(
+        data, num_agents=5, num_partitions=8, pi=2, rho=2, conditions=LOSSY, seed=seed
+    )
+    _assert_equivalent(sim_s, hist_s, sim_v, hist_v, 5)
+    assert sim_s.net.pubsub.messages_sent == sim_v.messages_sent
+    assert sim_s.net.pubsub.messages_dropped == sim_v.messages_dropped
+    assert sim_v.messages_dropped > 0  # losses actually happened
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        # rho=1: every loss is unrecoverable for the round; delayed updates
+        # pile onto the single holder next round
+        dict(num_agents=4, num_partitions=6, pi=2, rho=1, seed=5),
+        # rho=3 exercises the replica-consensus masks + version filtering
+        dict(num_agents=6, num_partitions=5, pi=2, rho=3, seed=6),
+        # loss-only and delay-only corners of NetworkConditions
+        dict(num_agents=4, num_partitions=6, pi=2, rho=2, seed=7,
+             conditions=NetworkConditions(loss_prob=0.4)),
+        dict(num_agents=4, num_partitions=6, pi=2, rho=2, seed=8,
+             conditions=NetworkConditions(delay_prob=0.5, max_delay_rounds=2)),
+        # delays longer than one round: deeper delta ring buffer
+        dict(num_agents=4, num_partitions=6, pi=2, rho=2, seed=9,
+             conditions=NetworkConditions(loss_prob=0.2, delay_prob=0.5, max_delay_rounds=6)),
+    ],
+)
+def test_engines_equivalent_lossy_corners(data, kw):
+    kw.setdefault("conditions", LOSSY)
+    sim_s, hist_s, sim_v, hist_v = _run_both(data, **kw)
+    _assert_equivalent(sim_s, hist_s, sim_v, hist_v, kw["num_agents"])
+    assert sim_s.net.pubsub.messages_dropped == sim_v.messages_dropped
+
+
+def test_lossy_kernel_path_matches_scalar(data):
+    """The partition-batched Pallas kernel path (interpret mode off-TPU)
+    aggregates the ring-buffered delta windows identically."""
+    from repro.fl.vectorized import VectorizedIPLSSimulation
+
+    x_tr, y_tr, x_te, y_te = data
+    cfg = SimConfig(
+        num_agents=4, num_partitions=6, pi=2, rho=2, rounds=3,
+        local_iters=2, conditions=LOSSY, seed=0,
+    )
+    shards = iid_split(x_tr, y_tr, cfg.num_agents, seed=0)
+    sim_s = IPLSSimulation(cfg, shards, x_te, y_te)
+    sim_s.run()
+    sim_v = VectorizedIPLSSimulation(cfg, shards, x_te, y_te, use_kernel=True)
+    sim_v.run()
+    w_s = np.stack([sim_s.agents[a].load_model() for a in range(cfg.num_agents)])
     np.testing.assert_allclose(w_s, sim_v.agent_weights(), atol=1e-4)
+    assert sim_s.net.pubsub.total_bytes() == sim_v._bytes_total
 
 
 def test_vectorized_rejects_out_of_scope_configs(data):
     x_tr, y_tr, x_te, y_te = data
     shards = iid_split(x_tr, y_tr, 4, seed=0)
+    # lossy conditions are IN scope since the mask-stream path
     lossy = SimConfig(num_agents=4, rounds=2, conditions=LOSSY, engine="vectorized")
-    with pytest.raises(ValueError):
-        make_simulation(lossy, shards, x_te, y_te)
+    sim = make_simulation(lossy, shards, x_te, y_te)
+    assert sim._lossy
     churny = SimConfig(num_agents=4, rounds=2, churn={1: [(3, "offline")]}, engine="vectorized")
     with pytest.raises(ValueError):
         make_simulation(churny, shards, x_te, y_te)
