@@ -1,35 +1,88 @@
 """Round-engine throughput: scalar (per-agent Python loops) vs vectorized
-(a few batched device calls per round), same SimConfig, PERFECT and LOSSY
-networks.
+(a few batched device calls per round) vs scanned (one ``lax.scan`` device
+call per ``scan_rounds`` window), same SimConfig, PERFECT and LOSSY networks.
 
 Reports rounds/sec and agent*rounds/sec at A in {10, 32, 100} — the paper's
 scalability story is per-agent work staying constant, so agent*rounds/sec is
 the number that must GROW with A for the simulator to reach paper-scale
 agent counts. The LOSSY rows measure the mask-stream path (pre-drawn
 loss/delay fates + delta ring buffer), i.e. the scenario that previously
-forced the scalar engine. The first round per engine is excluded (jit
-compile + warm-up); both engines then run the same number of timed rounds.
+forced the scalar engine. The scanned rows measure the multi-round fused
+path whose per-round device dispatches drop to ~1/W of the unscanned
+vectorized engine (``dispatches_per_round`` in the derived column).
+
+Timing discipline: ``time.perf_counter`` (monotonic, high resolution), the
+warm-up covers one full scan window so jit compile never lands in the
+steady-state measurement, and the last device output is
+``jax.block_until_ready``-synced before the timer stops so async dispatch
+cannot leak timed work past the stop.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List
+from typing import List, Tuple
+
+import jax
 
 from benchmarks.common import csv_row, load_data, save_json
 from repro.data import iid_split
 from repro.fl import SimConfig, make_simulation
 from repro.p2p.network import LOSSY, PERFECT
 
+SCAN_W = 8  # window size for the scanned variant (matches acceptance bar)
 
-def _time_engine(engine: str, shards, x_te, y_te, cfg: SimConfig, rounds: int) -> float:
-    """Seconds per round, steady state (construction + warm-up round excluded)."""
-    sim = make_simulation(dataclasses.replace(cfg, engine=engine), shards, x_te, y_te)
-    sim.run_round(0)  # warm-up: jit compile, buffer growth
-    t0 = time.time()
-    for r in range(1, rounds + 1):
-        sim.run_round(r)
-    return (time.time() - t0) / rounds
+
+def _sync(sim) -> None:
+    """Block until the engine's device-resident state is materialized.
+
+    The vectorized engines dispatch asynchronously; without an explicit sync
+    the timer stops while device work is still in flight. The scalar engine
+    keeps no persistent device arrays (its per-round host pulls already
+    synchronize), so this is a no-op there.
+    """
+    for name in ("_V_pre", "_V_merged", "_Vl", "_C"):
+        v = getattr(sim, name, None)
+        if v is not None:
+            jax.block_until_ready(v)
+
+
+def _time_engine(
+    engine: str, shards, x_te, y_te, cfg: SimConfig, rounds: int, scan: int = 0
+) -> Tuple[float, float]:
+    """(seconds per round, device dispatches per round), steady state.
+
+    Warm-up runs one full scan window (or one round when unscanned) so jit
+    compile and buffer growth are excluded; the timed section then covers a
+    whole number of windows.
+    """
+    warm = scan if scan else 1
+    timed = rounds
+    if scan:  # timed section must be a whole number of windows
+        timed = ((max(rounds, scan) + scan - 1) // scan) * scan
+    cfg = dataclasses.replace(
+        cfg, engine=engine, scan_rounds=scan, rounds=warm + timed
+    )
+    sim = make_simulation(cfg, shards, x_te, y_te)
+    if scan:
+        sim.run_window(0, scan)
+    else:
+        sim.run_round(0)
+    _sync(sim)
+    d0 = getattr(sim, "device_dispatches", 0)
+    t0 = time.perf_counter()
+    r = warm
+    while r < warm + timed:
+        if scan:
+            sim.run_window(r, scan)
+            r += scan
+        else:
+            sim.run_round(r)
+            r += 1
+    _sync(sim)
+    dt = time.perf_counter() - t0
+    dpr = (getattr(sim, "device_dispatches", 0) - d0) / timed
+    return dt / timed, dpr
 
 
 def run(
@@ -49,13 +102,22 @@ def run(
                 num_agents=n, num_partitions=10, pi=2, rho=2,
                 local_iters=2, batch_size=64, eval_agents=4, conditions=cond,
             )
-            s_scalar = _time_engine("scalar", shards, x_te, y_te, cfg, rounds)
-            s_vec = _time_engine("vectorized", shards, x_te, y_te, cfg, rounds)
+            s_scalar, _ = _time_engine("scalar", shards, x_te, y_te, cfg, rounds)
+            s_vec, d_vec = _time_engine("vectorized", shards, x_te, y_te, cfg, rounds)
+            s_scan, d_scan = _time_engine(
+                "vectorized", shards, x_te, y_te, cfg, rounds, scan=SCAN_W
+            )
             speedup = s_scalar / s_vec
+            scan_speedup = s_vec / s_scan
             results[f"n{n}{tag}"] = {
                 "scalar_rounds_per_s": 1.0 / s_scalar,
                 "vectorized_rounds_per_s": 1.0 / s_vec,
+                "scanned_rounds_per_s": 1.0 / s_scan,
                 "speedup": speedup,
+                "scan_speedup_vs_vectorized": scan_speedup,
+                "scan_rounds": SCAN_W,
+                "vectorized_dispatches_per_round": d_vec,
+                "scanned_dispatches_per_round": d_scan,
             }
             rows.append(
                 csv_row(
@@ -69,7 +131,16 @@ def run(
                     f"rounds_vectorized{tag}_n{n}",
                     s_vec * 1e6,
                     f"rounds_per_s={1/s_vec:.2f};agent_rounds_per_s={n/s_vec:.1f};"
-                    f"speedup_vs_scalar={speedup:.1f}x",
+                    f"speedup_vs_scalar={speedup:.1f}x;dispatches_per_round={d_vec:.2f}",
+                )
+            )
+            rows.append(
+                csv_row(
+                    f"rounds_scan{SCAN_W}{tag}_n{n}",
+                    s_scan * 1e6,
+                    f"rounds_per_s={1/s_scan:.2f};agent_rounds_per_s={n/s_scan:.1f};"
+                    f"speedup_vs_vectorized={scan_speedup:.2f}x;"
+                    f"dispatches_per_round={d_scan:.3f}",
                 )
             )
     if out_json:

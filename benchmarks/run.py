@@ -44,9 +44,11 @@ def main() -> None:
         rounds = 2 if args.quick else 4
         counts = (10, 32) if args.quick else (10, 32, 100)
         lossy_counts = (10,) if args.quick else (10, 32)
+        # BENCH_rounds.json lives at the repo root: it is the persisted perf
+        # trajectory for the round engines and is uploaded as a CI artifact
         for r in bench_rounds.run(
             rounds=rounds, agent_counts=counts, lossy_agent_counts=lossy_counts,
-            out_json="benchmarks/out_rounds.json",
+            out_json="BENCH_rounds.json",
         ):
             print(r)
         sys.stdout.flush()

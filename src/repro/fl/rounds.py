@@ -70,6 +70,17 @@ class MessageFates:
         delivered, delay = self.draw(channel, rnd, agent, part, peer)
         return bool(delivered), int(delay)
 
+    def draw_window(self, channel: int, rounds, agent, part, peer=0):
+        """Windowed batch draw: fates for a whole window of rounds at once,
+        returned as ``(W, *broadcast(agent, part, peer))`` tensors. Row ``w``
+        equals ``draw(channel, rounds[w], agent, part, peer)`` exactly (the
+        stream is a pure hash of the coordinates), so the scan engine can
+        materialize every per-round mask/delay tensor of a `lax.scan` window
+        up front without perturbing the scalar engine's draws."""
+        return self.conditions.sample_stream_window(
+            self.seed, channel, rounds, agent, part, peer
+        )
+
     def pubsub_fate(
         self, topic: str, sender: int, recipient: int, payload: Any, counter: int
     ) -> Tuple[bool, int]:
@@ -127,6 +138,16 @@ class SimConfig:
     # "vectorized" (whole-round batched device calls; any NetworkConditions,
     # fixed membership only — see fl/vectorized.py and docs/ENGINE.md)
     engine: str = "scalar"
+    # multi-round fusion (vectorized engine only): 0 = one device call per
+    # round; W >= 1 = run windows of W rounds as ONE lax.scan-driven device
+    # call each, with batches / fate tensors / routing tables pre-drawn for
+    # the whole window (see docs/ENGINE.md "Multi-round fused scan")
+    scan_rounds: int = 0
+    # scanned-mode evaluation cadence: evaluate every `eval_cadence`-th round
+    # (plus the final round); skipped rounds reuse the last computed accuracy
+    # in the history. 1 (default) evaluates every round, so accuracy traces
+    # are identical to the unscanned engines.
+    eval_cadence: int = 1
     # data shard for agents added by a "join" churn action: a callable
     # agent_id -> (x, y). None = round-robin over the initial shards.
     join_shard: Optional[Callable[[int], Tuple[np.ndarray, np.ndarray]]] = None

@@ -49,6 +49,18 @@ counters exactly. See docs/ENGINE.md.
 Scope: fixed membership (churn schedules still require the scalar oracle).
 Traffic accounting is computed in closed form (PERFECT) or by the mask
 stream (LOSSY) and matches the scalar engine's pubsub counters exactly.
+
+Multi-round fusion: with ``SimConfig(scan_rounds=W)`` the engine runs
+windows of W rounds as ONE ``lax.scan``-driven device call each. Batches,
+fate tensors (via the windowed batch draw ``MessageFates.draw_window``)
+and the host control plane are pre-drawn for the whole window; the device
+state — weights plane, cache plane, delta ring, value-history rings —
+lives in the fixed-shape scan carry, and the ring rotations/cache-event
+gathers run as in-carry dynamic indices inside the scanned body. Per-round
+bytes/messages/drops come back as stacked per-round values, still exactly
+equal to the scalar pubsub counters. Evaluation is gated by
+``eval_cadence`` so it can move to window boundaries. See docs/ENGINE.md
+"Multi-round fused scan".
 """
 from __future__ import annotations
 
@@ -65,6 +77,35 @@ from repro.models import mlp_mnist
 # cache-event value sources (see _run_round_lossy)
 _KIND_START = 0  # holder value at the start of the serve round (fetch reply)
 _KIND_AGG = 1  # holder value after aggregation, pre-merge (UpdateModel reply)
+
+
+class _FateWindow:
+    """Per-round slices of windowed fate draws (`MessageFates.draw_window`).
+
+    The request-side channels (fetch / UpdateModel / replica publish) have
+    fixed per-round keys, so a whole scan window's (W, A, K) mask/delay
+    tensors can be materialized in one hashing pass up front; the reply
+    channels stay per-event draws inside the control plane (their keys
+    depend on which messages actually arrived). Slices equal the per-round
+    draws exactly — fates are pure hashes of their coordinates."""
+
+    def __init__(self, fates, r0, W, a_col, k_row, rep_src_agent, rep_k, rep_dst_agent):
+        from repro.fl.rounds import CH_FETCH, CH_REPLICA, CH_UPDATE
+
+        rounds = np.arange(r0, r0 + W)
+        self.r0 = r0
+        self.fetch = fates.draw_window(CH_FETCH, rounds, a_col, k_row)
+        self.update = fates.draw_window(CH_UPDATE, rounds, a_col, k_row)
+        self.replica = (
+            fates.draw_window(CH_REPLICA, rounds, rep_src_agent, rep_k, rep_dst_agent)
+            if len(rep_src_agent)
+            else None
+        )
+
+    def slice(self, name: str, t: int):
+        de, dl = getattr(self, name)
+        w = t - self.r0
+        return de[w], dl[w]
 
 
 class VectorizedIPLSSimulation:
@@ -95,6 +136,16 @@ class VectorizedIPLSSimulation:
         # (same gate as the scalar engine's keyed-fates installation)
         self._lossy = cfg.conditions.loss_prob > 0 or cfg.conditions.delay_prob > 0
         self.cfg = cfg
+        # multi-round fusion: run() executes windows of `scan_rounds` rounds
+        # as one lax.scan device call each (0 = per-round calls)
+        self.scan_rounds = int(getattr(cfg, "scan_rounds", 0) or 0)
+        if self.scan_rounds < 0:
+            raise ValueError("scan_rounds must be >= 0")
+        self._eval_cadence = max(1, int(getattr(cfg, "eval_cadence", 1) or 1))
+        # jitted-call counter: benchmarks report dispatches/round (the scan
+        # path's whole point is driving this to 1/W)
+        self.device_dispatches = 0
+        self._last_accs: np.ndarray | None = None
         self.x_test, self.y_test = x_test, y_test
         # exact init state + init-phase traffic via the scalar constructor
         seed_sim = IPLSSimulation(cfg, shards, x_test, y_test)
@@ -305,12 +356,12 @@ class VectorizedIPLSSimulation:
         # contiguous row range of the (K_inst, A) contribution matrix
         inst_row0 = [int(rows[0]) if len(rows) else 0 for rows in inst_of_k]
 
-        def round_core(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M, t_eval):
-            """Aggregation + replica consensus + eval, given the pre/post
-            local-SGD weight matrices. Holder h's received-delta sum for an
-            instance is the masked column reduction M @ (W - W2) over its
-            partition window — computed as two GEMMs so the (A, N) delta
-            matrix is never materialized."""
+        def agg_merge(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M):
+            """Aggregation + replica consensus, given the pre/post local-SGD
+            weight matrices. Holder h's received-delta sum for an instance is
+            the masked column reduction M @ (W - W2) over its partition
+            window — computed as two GEMMs so the (A, N) delta matrix is
+            never materialized."""
             # eps recursion refreshed from r BEFORE applying (paper §2.2)
             r = jnp.sum(contrib_mask, axis=1)
             eps_new = jnp.where(
@@ -344,13 +395,36 @@ class VectorizedIPLSSimulation:
             V_merged_new = (
                 jax.ops.segment_sum(V_pre, inst_k, num_segments=K) / counts[:, None]
             )
+            return V_pre, V_merged_new, eps_new
+
+        def eval_rows(V_pre, V_merged_new, t_eval):
             # evaluate ONLY the sub-sampled agents: their assembled rows are
             # a few MB, so the full (A, N) matrix never leaves this call
             W_eval = build_W(V_pre, V_merged_new, t_eval, E)
-            accs = jax.vmap(
+            return jax.vmap(
                 lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
             )(W_eval)
-            return V_pre, V_merged_new, eps_new, accs
+
+        def round_core(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M, t_eval):
+            V_pre, V_merged_new, eps_new = agg_merge(
+                V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M
+            )
+            return V_pre, V_merged_new, eps_new, eval_rows(V_pre, V_merged_new, t_eval)
+
+        buckets = self._buckets
+
+        def sgd_all(W, Xs, Ys):
+            """All agents' local SGD on the (A, N) weight matrix; Xs/Ys are
+            per-bucket stacked batches (a single bucket unless array_split
+            handed out two shard sizes)."""
+            step = lambda w, x, y: mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t)
+            if len(buckets) == 1:
+                return jax.vmap(step)(W, Xs[0], Ys[0])
+            parts = [
+                jax.vmap(step)(W[lo:hi], Xs[b], Ys[b])
+                for b, (lo, hi, _) in enumerate(buckets)
+            ]
+            return jnp.concatenate(parts, axis=0)
 
         def fused_round(V_pre, V_merged, eps, X, Y, t_prev, contrib_idx, contrib_mask, contrib_M, t_eval):
             """One whole training round in a single device call: rebuild all
@@ -360,9 +434,39 @@ class VectorizedIPLSSimulation:
             W2 = jax.vmap(lambda w, x, y: mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t))(W, X, Y)
             return round_core(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M, t_eval)
 
+        def make_scan(gate_eval: bool):
+            """The multi-round fused path: a window of W rounds as ONE
+            device call, `lax.scan` over per-round xs (batches + routing
+            tables), carry = the small value tables (V_pre, V_merged, eps).
+            The scanned body is exactly `fused_round`'s math, so any W
+            produces the same trajectory as W unscanned calls."""
+
+            def body(carry, xs):
+                V_pre, V_merged, eps = carry
+                Xr, Yr, t_prev, idx, mask, M, t_eval, de = xs
+                W = build_W(V_pre, V_merged, t_prev, A)
+                W2 = sgd_all(W, Xr, Yr)
+                V_pre2, V_m2, eps2 = agg_merge(V_merged, eps, W, W2, idx, mask, M)
+                if gate_eval:
+                    accs = jax.lax.cond(
+                        de,
+                        lambda: eval_rows(V_pre2, V_m2, t_eval),
+                        lambda: jnp.full((E,), jnp.nan, jnp.float32),
+                    )
+                else:
+                    accs = eval_rows(V_pre2, V_m2, t_eval)
+                return (V_pre2, V_m2, eps2), accs
+
+            def scan_window(V_pre, V_merged, eps, xs_all):
+                carry, accs = jax.lax.scan(body, (V_pre, V_merged, eps), xs_all)
+                return carry + (accs,)
+
+            return jax.jit(scan_window, donate_argnums=(0, 1, 2))
+
         self._build_W_j = jax.jit(build_W, static_argnums=(3,))
         self._round_core_j = jax.jit(round_core)
         self._fused_round = jax.jit(fused_round, donate_argnums=(0, 1, 2))
+        self._scan_window_j = make_scan(self._eval_cadence > 1)
         self._batched_deltas_keep = jax.jit(
             lambda W, X, Y: jax.vmap(_one_delta)(W, X, Y)
         )
@@ -461,11 +565,17 @@ class VectorizedIPLSSimulation:
         self._Vagg_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
         self._Vstart_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
 
-        # in-flight event queues, keyed by the round that consumes them
-        self._serve_q: Dict[int, list] = {}
-        self._arr_q: Dict[int, list] = {}
-        self._cache_q: Dict[int, list] = {}
-        self._merge_q: Dict[int, list] = {}
+        # in-flight event queues: bounded-depth rings indexed by
+        # (consuming round) mod depth. Nothing stays in flight longer than
+        # Lu rounds (delays are capped), so depth Lu+1 suffices; every slot
+        # is drained exactly once per depth rounds. The window runner stacks
+        # each round's drained events into dense per-round tensors that ride
+        # the lax.scan as xs (the device state itself lives in the carry).
+        self._qdepth = self._Lu + 1
+        self._serve_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._arr_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._cache_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._merge_ring: List[list] = [[] for _ in range(self._qdepth)]
         self._seq = 0
         self._t = 0
         # kernel-path contributor cap: owner + every other agent once per
@@ -511,12 +621,12 @@ class VectorizedIPLSSimulation:
             W = build_W(V, C0, widx)
             return Vstart_new, C0, W
 
-        def core(V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
-                 M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+        def core_main(V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
+                      M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
             """Phases 2-3: aggregate every (partition, replica-slot) instance
             from the current + in-flight delta windows, run the eps
             recursion, version-filtered replica consensus, reply-driven
-            cache updates, batched eval, and roll the history rings."""
+            cache updates, and roll the history rings."""
             D_all = jnp.concatenate([D_now[None], D_hist], axis=0).reshape(LA, N)
             eps_new = jnp.where(
                 r_vec > 0, alpha * eps + (1.0 - alpha) / jnp.maximum(r_vec, 1.0), eps
@@ -558,21 +668,81 @@ class VectorizedIPLSSimulation:
                 axis=0,
             )
             C2 = jnp.where(c2_mask[:, :, None], T2[c2_src], C0)
+            # roll the rings
+            D_hist_new = jnp.concatenate([D_now[None], D_hist], axis=0)[:Lu]
+            Vagg_hist_new = jnp.concatenate([V_agg[None], Vagg_hist[:-1]], axis=0)
+            return V_new, eps_new, C2, D_hist_new, Vagg_hist_new
+
+        def eval_lossy(V_new, C2):
             # evaluate the sub-sampled agents on end-of-round state
             tbl_eval = jnp.concatenate([V_new, C2.reshape(A * K, S)], axis=0)
             W_eval = jnp.concatenate(
                 [tbl_eval[widx_eval[:, k], : sizes[k]] for k in range(K)], axis=1
             )
-            accs = jax.vmap(
+            return jax.vmap(
                 lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
             )(W_eval)
-            # roll the rings
-            D_hist_new = jnp.concatenate([D_now[None], D_hist], axis=0)[:Lu]
-            Vagg_hist_new = jnp.concatenate([V_agg[None], Vagg_hist[:-1]], axis=0)
+
+        def core(V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
+                 M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+            V_new, eps_new, C2, D_hist_new, Vagg_hist_new = core_main(
+                V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
+                M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask,
+            )
+            accs = eval_lossy(V_new, C2)
             return V_new, eps_new, C2, D_hist_new, Vagg_hist_new, accs
+
+        buckets = self._buckets
+        E = len(self._eval_idx)
+
+        def sgd_all(W, Xs, Ys):
+            step = lambda w, x, y: mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t)
+            if len(buckets) == 1:
+                return jax.vmap(step)(W, Xs[0], Ys[0])
+            parts = [
+                jax.vmap(step)(W[lo:hi], Xs[b], Ys[b])
+                for b, (lo, hi, _) in enumerate(buckets)
+            ]
+            return jnp.concatenate(parts, axis=0)
+
+        def make_scan(gate_eval: bool):
+            """Multi-round fused LOSSY path: fold pre / SGD / core into a
+            single scanned body, one device call per W-round window. The
+            carry is the fixed-shape device state (weights plane, cache
+            plane, delta ring, value-history rings); the host control
+            plane's per-round dense tensors ride as scan xs."""
+
+            def body(carry, xs):
+                V, eps, C, D_hist, Vagg_hist, Vstart_hist = carry
+                (Xr, Yr, c0_mask, c0_src, M_all, r_vec, Gm, cnt,
+                 c2_mask, c2_src, kidx, kmask, de) = xs
+                Vstart_new, C0, W = pre(V, C, Vstart_hist, Vagg_hist, c0_mask, c0_src)
+                W2 = sgd_all(W, Xr, Yr)
+                D_now = W - W2
+                V_new, eps_new, C2, D_hist_new, Vagg_hist_new = core_main(
+                    V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
+                    M_all, r_vec, Gm, cnt, c2_mask, c2_src, kidx, kmask,
+                )
+                if gate_eval:
+                    accs = jax.lax.cond(
+                        de,
+                        lambda: eval_lossy(V_new, C2),
+                        lambda: jnp.full((E,), jnp.nan, jnp.float32),
+                    )
+                else:
+                    accs = eval_lossy(V_new, C2)
+                return (V_new, eps_new, C2, D_hist_new, Vagg_hist_new, Vstart_new), accs
+
+            def scan_window(V, eps, C, D_hist, Vagg_hist, Vstart_hist, xs_all):
+                return jax.lax.scan(
+                    body, (V, eps, C, D_hist, Vagg_hist, Vstart_hist), xs_all
+                )
+
+            return jax.jit(scan_window, donate_argnums=(0, 1, 2, 3, 4, 5))
 
         self._lossy_pre_j = jax.jit(pre, donate_argnums=(1,))
         self._lossy_core_j = jax.jit(core, donate_argnums=(0, 1, 2, 4, 5))
+        self._scan_window_j = make_scan(self._eval_cadence > 1)
         self._batched_deltas_keep = jax.jit(
             lambda W, X, Y: jax.vmap(
                 lambda w, x, y: w - mlp_mnist.sgd_steps_flat(w, x, y, lr, iters, layout_t)
@@ -589,12 +759,19 @@ class VectorizedIPLSSimulation:
         (Replies from the SAME holder in the same phase carry identical
         values, so their relative order is immaterial.)"""
         holder = int(self._inst_owner[inst])
-        self._cache_q.setdefault(deliver_ctr // self._ticks, []).append(
+        self._cache_ring[(deliver_ctr // self._ticks) % self._qdepth].append(
             (deliver_ctr, send_ctr, holder, self._seq, a, k, kind, src_round, inst)
         )
         self._seq += 1
 
-    def _run_round_lossy(self, rnd: int) -> dict:
+    def _control_round(self, rnd: int, wf: "_FateWindow | None" = None) -> dict:
+        """One round of the host-side control plane: fate draws, queue-ring
+        drains, fetch warm-up state machine, traffic counters. Pure
+        integer/boolean numpy over the fixed-shape event space — no device
+        data — so a scan window can run it W times up front and stack the
+        resulting dense tensors as `lax.scan` xs. Returns the per-round
+        control tensors plus (msgs, drops, nbytes), which are exactly the
+        scalar pubsub's counters for the round by construction."""
         from repro.fl.rounds import (
             CH_FETCH,
             CH_FETCH_REPLY,
@@ -625,18 +802,21 @@ class VectorizedIPLSSimulation:
         need = (~owner) & (~self._has_cache)
         n_need = int(need.sum())
         if n_need:
-            de, dl = f.draw(CH_FETCH, t, a_col, k_row)
+            de, dl = wf.slice("fetch", t) if wf else f.draw(CH_FETCH, t, a_col, k_row)
             msgs += n_need
             nbytes += 16 * n_need
             drops += int((need & ~de).sum())
             lat = lat_rounds(dl)
             for a, k in np.argwhere(need & de):
-                self._serve_q.setdefault(t + int(lat[a, k]), []).append(
+                self._serve_ring[(t + int(lat[a, k])) % self._qdepth].append(
                     (t, int(a), int(k), int(tgt_inst[a, k]))
                 )
 
         # ---- phase 1: holders serve the fetches that arrived --------------
-        for send_r, a, k, inst in self._serve_q.pop(t, []):
+        serves, self._serve_ring[t % self._qdepth] = (
+            self._serve_ring[t % self._qdepth], []
+        )
+        for send_r, a, k, inst in serves:
             de1, d1 = f.draw_one(CH_FETCH_REPLY, t, a, k, int(self._inst_owner[inst]))
             msgs += 1
             nbytes += 4 * int(sizes[k])
@@ -648,19 +828,21 @@ class VectorizedIPLSSimulation:
                 drops += 1
 
         # ---- phase 2: UpdateModel sends -----------------------------------
-        de_u, dl_u = f.draw(CH_UPDATE, t, a_col, k_row)
+        de_u, dl_u = wf.slice("update", t) if wf else f.draw(CH_UPDATE, t, a_col, k_row)
         nonown = ~owner
         msgs += self._upd_msgs
         nbytes += self._upd_bytes
         drops += int((nonown & ~de_u).sum())
         lat_u = lat_rounds(dl_u)
         for a, k in np.argwhere(nonown & de_u):
-            self._arr_q.setdefault(t + int(lat_u[a, k]), []).append(
+            self._arr_ring[(t + int(lat_u[a, k])) % self._qdepth].append(
                 (t, int(a), int(k), int(tgt_inst[a, k]))
             )
 
         # ---- arrivals => contribution masks + UpdateModel replies ---------
-        arrivals = self._arr_q.pop(t, [])
+        arrivals, self._arr_ring[t % self._qdepth] = (
+            self._arr_ring[t % self._qdepth], []
+        )
         M_all = np.zeros((K_inst, (Lu + 1) * A), np.float32)
         M_all[np.arange(K_inst), self._inst_owner] = 1.0  # owner self-delta
         for send_r, a, k, inst in arrivals:
@@ -688,21 +870,28 @@ class VectorizedIPLSSimulation:
         if len(self._rep_src):
             msgs += self._pub_msgs
             nbytes += self._pub_bytes
-            de_p, dl_p = f.draw(
-                CH_REPLICA, t, self._rep_src_agent, self._rep_k, self._rep_dst_agent
+            de_p, dl_p = (
+                wf.slice("replica", t)
+                if wf
+                else f.draw(
+                    CH_REPLICA, t, self._rep_src_agent, self._rep_k, self._rep_dst_agent
+                )
             )
             drops += int((~de_p).sum())
             lat_p = lat_rounds(dl_p)
             for j in np.nonzero(de_p)[0]:
                 si, di = int(self._rep_src[j]), int(self._rep_dst[j])
-                self._merge_q.setdefault(t + int(lat_p[j]), []).append(
+                self._merge_ring[(t + int(lat_p[j])) % self._qdepth].append(
                     (t, si, di, int(ver_after[si]))
                 )
 
         # ---- merge set: version-filtered replica values due this round ----
         Gm = np.zeros((HD, K_inst, K_inst), np.float32)
         cnt = np.zeros(K_inst, np.float32)
-        for send_r, si, di, ver_sent in self._merge_q.pop(t, []):
+        merges, self._merge_ring[t % self._qdepth] = (
+            self._merge_ring[t % self._qdepth], []
+        )
+        for send_r, si, di, ver_sent in merges:
             if ver_sent >= ver_after[di]:
                 Gm[t - send_r, di, si] += 1.0
                 cnt[di] += 1.0
@@ -713,7 +902,10 @@ class VectorizedIPLSSimulation:
         c0_src = np.zeros((A, K), np.int32)
         c2_mask = np.zeros((A, K), bool)
         c2_src = np.zeros((A, K), np.int32)
-        for ctr, _sc, _holder, _seq, a, k, kind, src_r, inst in sorted(self._cache_q.pop(t, [])):
+        cache_events, self._cache_ring[t % self._qdepth] = (
+            self._cache_ring[t % self._qdepth], []
+        )
+        for ctr, _sc, _holder, _seq, a, k, kind, src_r, inst in sorted(cache_events):
             if kind == _KIND_START:
                 idx = (t - src_r) * K_inst + inst
             elif src_r < t:
@@ -728,11 +920,34 @@ class VectorizedIPLSSimulation:
                 c2_src[a, k] = idx
             self._has_cache[a, k] = True  # suppresses fetches from round t+1
 
+        # ---- kernel-path contributor gathers ------------------------------
+        if self._use_kernel:
+            kidx = np.zeros((K_inst, self.R_cap), np.int32)
+            kmask = np.zeros((K_inst, self.R_cap), np.float32)
+            for i in range(K_inst):
+                rows = np.nonzero(M_all[i])[0]
+                kidx[i, : len(rows)] = rows
+                kmask[i, : len(rows)] = 1.0
+        else:
+            kidx = np.zeros((1, 1), np.int32)
+            kmask = np.zeros((1, 1), np.float32)
+
+        self._t = t + 1
+        return dict(
+            rnd=rnd, c0_mask=c0_mask, c0_src=c0_src, c2_mask=c2_mask,
+            c2_src=c2_src, M_all=M_all, r_vec=np.asarray(r_vec, np.float32),
+            Gm=Gm, cnt=cnt, kidx=kidx, kmask=kmask,
+            msgs=msgs, drops=drops, nbytes=nbytes,
+        )
+
+    def _run_round_lossy(self, rnd: int) -> dict:
+        ctl = self._control_round(rnd)
+
         # ---- device calls -------------------------------------------------
         xs, ys = self._draw_batches()
         Vstart_new, C0, W = self._lossy_pre_j(
             self._Vl, self._C, self._Vstart_hist, self._Vagg_hist,
-            jnp.asarray(c0_mask), jnp.asarray(c0_src),
+            jnp.asarray(ctl["c0_mask"]), jnp.asarray(ctl["c0_src"]),
         )
         if len(self._buckets) == 1:
             D_now = self._batched_deltas_keep(
@@ -748,41 +963,73 @@ class VectorizedIPLSSimulation:
                 for lo, hi, _ in self._buckets
             ]
             D_now = jnp.concatenate(parts, axis=0)
-        if self._use_kernel:
-            kidx = np.zeros((K_inst, self.R_cap), np.int32)
-            kmask = np.zeros((K_inst, self.R_cap), np.float32)
-            for i in range(K_inst):
-                rows = np.nonzero(M_all[i])[0]
-                kidx[i, : len(rows)] = rows
-                kmask[i, : len(rows)] = 1.0
-        else:
-            kidx = np.zeros((1, 1), np.int32)
-            kmask = np.zeros((1, 1), np.float32)
         (
             self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist, accs
         ) = self._lossy_core_j(
             self._Vl, self._eps_l, C0, D_now, self._D_hist, self._Vagg_hist,
-            Vstart_new, jnp.asarray(M_all), jnp.asarray(r_vec), jnp.asarray(Gm),
-            jnp.asarray(cnt), jnp.asarray(c2_mask), jnp.asarray(c2_src),
-            jnp.asarray(kidx), jnp.asarray(kmask),
+            Vstart_new, jnp.asarray(ctl["M_all"]), jnp.asarray(ctl["r_vec"]),
+            jnp.asarray(ctl["Gm"]), jnp.asarray(ctl["cnt"]),
+            jnp.asarray(ctl["c2_mask"]), jnp.asarray(ctl["c2_src"]),
+            jnp.asarray(ctl["kidx"]), jnp.asarray(ctl["kmask"]),
         )
         self._Vstart_hist = Vstart_new
-        self._t = t + 1
+        self.device_dispatches += 2 + len(self._buckets)
 
-        self.messages_sent += msgs
-        self.messages_dropped += drops
-        self._bytes_total += nbytes
-        accs = np.asarray(accs, np.float32)
-        metrics = {
-            "acc_mean": float(accs.mean()),
-            "acc_std": float(accs.std()),
-            "acc_max": float(accs.max()),
-            "round": rnd,
-            "active": A,
-            "bytes_total": self._bytes_total,
-        }
+        self.messages_sent += ctl["msgs"]
+        self.messages_dropped += ctl["drops"]
+        self._bytes_total += ctl["nbytes"]
+        metrics = self._metrics_entry(rnd, np.asarray(accs, np.float32))
         self.history.append(metrics)
         return metrics
+
+    def _run_window_lossy(self, r0: int, W: int) -> None:
+        """W LOSSY rounds as one lax.scan device call: run the host control
+        plane W times up front (windowed fate draws where the keys are
+        fixed), stack its dense per-round tensors as scan xs, and scan the
+        fused pre+SGD+core body over them with the device state in the
+        carry."""
+        A, K = self.A, self.K
+        wf = _FateWindow(
+            self._fates, self._t, W, np.arange(A)[:, None], np.arange(K)[None, :],
+            self._rep_src_agent, self._rep_k, self._rep_dst_agent,
+        )
+        ctls = [self._control_round(r0 + w, wf) for w in range(W)]
+        Xw, Yw = [], []
+        for _ in range(W):
+            xs, ys = self._draw_batches()
+            Xw.append(xs)
+            Yw.append(ys)
+        Xs = tuple(
+            jnp.asarray(np.stack([np.stack(Xw[w][lo:hi]) for w in range(W)]))
+            for lo, hi, _ in self._buckets
+        )
+        Ys = tuple(
+            jnp.asarray(np.stack([np.stack(Yw[w][lo:hi]) for w in range(W)]))
+            for lo, hi, _ in self._buckets
+        )
+        stack = lambda key: jnp.asarray(np.stack([c[key] for c in ctls]))
+        des = jnp.asarray([self._do_eval(r0 + w) for w in range(W)])
+        xs_all = (
+            Xs, Ys, stack("c0_mask"), stack("c0_src"), stack("M_all"),
+            stack("r_vec"), stack("Gm"), stack("cnt"), stack("c2_mask"),
+            stack("c2_src"), stack("kidx"), stack("kmask"), des,
+        )
+        carry, accs = self._scan_window_j(
+            self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist,
+            self._Vstart_hist, xs_all,
+        )
+        (
+            self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist,
+            self._Vstart_hist,
+        ) = carry
+        self.device_dispatches += 1
+        accs = np.asarray(accs, np.float32)
+        for w in range(W):
+            c = ctls[w]
+            self.messages_sent += c["msgs"]
+            self.messages_dropped += c["drops"]
+            self._bytes_total += c["nbytes"]
+            self.history.append(self._metrics_entry(r0 + w, accs[w]))
 
     # -- one round ----------------------------------------------------------
     def _draw_batches(self):
@@ -824,9 +1071,16 @@ class VectorizedIPLSSimulation:
             self._V_pre, self._V_merged, self._eps, accs = self._round_core_j(
                 self._V_merged, self._eps, W, W2, idx, mask, M, t_eval
             )
+        self.device_dispatches += 1 if len(self._buckets) == 1 else 2 + len(self._buckets)
         self._last_phase = p
         accs = np.asarray(accs, np.float32)
 
+        self._perfect_traffic(rnd)
+        metrics = self._metrics_entry(rnd, accs)
+        self.history.append(metrics)
+        return metrics
+
+    def _perfect_traffic(self, rnd: int) -> None:
         self._bytes_total += self._round_bytes + (
             self._round0_fetch_bytes if rnd == 0 else 0
         )
@@ -835,7 +1089,25 @@ class VectorizedIPLSSimulation:
         self.messages_sent += self._round_msgs + (
             self._round0_fetch_msgs if rnd == 0 else 0
         )
-        metrics = {
+
+    def _do_eval(self, rnd: int) -> bool:
+        """Scanned-mode eval gate: every `eval_cadence`-th round plus the
+        final round of the run."""
+        return (rnd + 1) % self._eval_cadence == 0 or rnd == self.cfg.rounds - 1
+
+    def _metrics_entry(self, rnd: int, accs: np.ndarray) -> dict:
+        """History entry for one round; rounds the scanned path skipped
+        (eval_cadence > 1 => NaN accs out of the cond) reuse the last
+        computed accuracies, so the history schema never changes."""
+        if np.isnan(accs).all():
+            accs = (
+                self._last_accs
+                if self._last_accs is not None
+                else np.zeros_like(accs)
+            )
+        else:
+            self._last_accs = accs
+        return {
             "acc_mean": float(accs.mean()),
             "acc_std": float(accs.std()),
             "acc_max": float(accs.max()),
@@ -843,12 +1115,79 @@ class VectorizedIPLSSimulation:
             "active": self.A,
             "bytes_total": self._bytes_total,
         }
-        self.history.append(metrics)
-        return metrics
+
+    def _run_window_perfect(self, r0: int, W: int) -> None:
+        """W PERFECT rounds as one lax.scan device call: batches and the
+        phase-cycled routing tables are stacked as (W, ...) scan xs, the
+        value tables (V_pre, V_merged, eps) ride the carry."""
+        # pre-draw the whole window's batches through the trainers' rng
+        # streams — round-major order, so the streams advance exactly as in
+        # the unscanned path
+        Xw, Yw = [], []
+        for _ in range(W):
+            xs, ys = self._draw_batches()
+            Xw.append(xs)
+            Yw.append(ys)
+        Xs = tuple(
+            jnp.asarray(np.stack([np.stack(Xw[w][lo:hi]) for w in range(W)]))
+            for lo, hi, _ in self._buckets
+        )
+        Ys = tuple(
+            jnp.asarray(np.stack([np.stack(Yw[w][lo:hi]) for w in range(W)]))
+            for lo, hi, _ in self._buckets
+        )
+        prev = self._last_phase
+        t_prev_l, idx_l, mask_l, M_l, t_eval_l, de_l = [], [], [], [], [], []
+        for w in range(W):
+            rnd = r0 + w
+            p = rnd % self._period
+            t_prev_l.append(self._t_inst[prev])
+            idx_l.append(self._contrib_idx[p])
+            mask_l.append(self._contrib_mask[p])
+            M_l.append(self._contrib_M[p])
+            t_eval_l.append(self._t_inst[p][self._eval_idx])
+            de_l.append(self._do_eval(rnd))
+            prev = p
+        xs_all = (
+            Xs, Ys,
+            jnp.asarray(np.stack(t_prev_l)), jnp.asarray(np.stack(idx_l)),
+            jnp.asarray(np.stack(mask_l)), jnp.asarray(np.stack(M_l)),
+            jnp.asarray(np.stack(t_eval_l)), jnp.asarray(np.asarray(de_l, bool)),
+        )
+        self._V_pre, self._V_merged, self._eps, accs = self._scan_window_j(
+            self._V_pre, self._V_merged, self._eps, xs_all
+        )
+        self.device_dispatches += 1
+        self._last_phase = prev
+        accs = np.asarray(accs, np.float32)
+        for w in range(W):
+            self._perfect_traffic(r0 + w)
+            self.history.append(self._metrics_entry(r0 + w, accs[w]))
+
+    def run_window(self, start_rnd: int, window: int) -> List[dict]:
+        """Run `window` consecutive rounds as ONE lax.scan-driven device
+        call (the multi-round fused path; see docs/ENGINE.md). Returns the
+        new history entries — one per round, bytes/messages/drops accounted
+        per round exactly as the scalar pubsub would."""
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        n0 = len(self.history)
+        if self._lossy:
+            self._run_window_lossy(start_rnd, window)
+        else:
+            self._run_window_perfect(start_rnd, window)
+        return self.history[n0:]
 
     def run(self) -> List[dict]:
-        for rnd in range(self.cfg.rounds):
-            self.run_round(rnd)
+        W = self.scan_rounds
+        if W:
+            rnd = 0
+            while rnd < self.cfg.rounds:
+                self.run_window(rnd, min(W, self.cfg.rounds - rnd))
+                rnd += min(W, self.cfg.rounds - rnd)
+        else:
+            for rnd in range(self.cfg.rounds):
+                self.run_round(rnd)
         return self.history
 
     # -- introspection (tests / benchmarks) ---------------------------------

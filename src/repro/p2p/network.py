@@ -93,6 +93,23 @@ class NetworkConditions:
         delay = np.where(delivered, delay, 0)
         return delivered, delay
 
+    def sample_stream_window(
+        self, seed: int, channel: int, rounds, *key
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Windowed batch draw: materialize a whole window of rounds' fates
+        up front as ``(W, *broadcast(key))`` tensors. ``rounds`` is a 1-D
+        array of round indices; the remaining key components broadcast as in
+        ``sample_stream``. Because fates are pure hashes of their
+        coordinates, slicing row ``w`` of the result equals a per-round
+        ``sample_stream(seed, channel, rounds[w], *key)`` draw exactly —
+        this is what lets the multi-round scan engine pre-draw every fate
+        tensor of a ``lax.scan`` window in one hashing pass."""
+        rounds = np.asarray(rounds, np.int64)
+        if key:
+            b = np.broadcast(*[np.asarray(c) for c in key])
+            rounds = rounds.reshape(rounds.shape + (1,) * b.ndim)
+        return self.sample_stream(seed, channel, rounds, *key)
+
 
 PERFECT = NetworkConditions()
 # "imperfect connectivity" setting used in the paper-matching experiments
