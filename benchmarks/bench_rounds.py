@@ -21,11 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from pathlib import Path
 from typing import List, Tuple
 
 import jax
 
 from benchmarks.common import csv_row, load_data, save_json
+from repro.analysis import analyze_paths
 from repro.data import iid_split
 from repro.fl import SimConfig, make_simulation
 from repro.p2p.network import LOSSY, PERFECT
@@ -143,6 +145,22 @@ def run(
                     f"dispatches_per_round={d_scan:.3f}",
                 )
             )
+    # the static-analysis gate's own cost, kept visible in the perf
+    # trajectory next to the numbers it guards
+    repo = Path(__file__).resolve().parents[1]
+    t0 = time.perf_counter()
+    analysis_findings = analyze_paths(
+        [repo / "src", repo / "tests", repo / "benchmarks"]
+    )
+    analysis_s = time.perf_counter() - t0
+    results["analysis_full_tree_s"] = analysis_s
+    rows.append(
+        csv_row(
+            "analysis_full_tree",
+            analysis_s * 1e6,
+            f"findings={len(analysis_findings)}",
+        )
+    )
     if out_json:
         save_json(out_json, results)
     return rows

@@ -2,10 +2,9 @@
 from __future__ import annotations
 
 import json
-import time
-from typing import Dict, List
+from typing import List
 
-from repro.data import iid_split, synth_mnist
+from repro.data import synth_mnist
 
 # evaluation uses a 2000-sample test subset and samples <=5 agents per round
 # (full-set, all-agent eval would dominate single-core runtime without

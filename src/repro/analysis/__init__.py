@@ -1,0 +1,30 @@
+"""repro.analysis — repo-native static analysis.
+
+Three rule packs over the repo's own invariants: Pallas kernel contracts
+(PL01–PL05), JAX tracer hygiene (JX01–JX05), and IPLS protocol invariants
+(PR01–PR02). Run as ``python -m repro.analysis [paths]``; see
+docs/ANALYSIS.md for the rule catalogue and suppression syntax.
+"""
+from repro.analysis.core import (
+    Finding,
+    Options,
+    Rule,
+    all_rules,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    main,
+    register,
+)
+
+__all__ = [
+    "Finding",
+    "Options",
+    "Rule",
+    "all_rules",
+    "analyze_file",
+    "analyze_paths",
+    "analyze_source",
+    "main",
+    "register",
+]

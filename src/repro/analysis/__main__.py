@@ -1,0 +1,5 @@
+"""CLI entry point: ``python -m repro.analysis [paths]``."""
+from repro.analysis.core import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

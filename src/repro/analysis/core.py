@@ -1,0 +1,386 @@
+"""Repo-native static-analysis framework.
+
+The invariants this repo's correctness rests on — Pallas BlockSpec/grid
+contracts, host/device boundary discipline inside traced code, the keyed
+fate-stream and traffic-counter symmetry between the scalar and vectorized
+engines — are not checkable by generic linters. Each was violated at least
+once in PRs 1-6 and only caught by equivalence tests after the fact. This
+module is the shared machinery for rule packs that check them at review
+time instead:
+
+  * ``Rule`` / ``@register`` — a registry of AST-visitor rules, each with a
+    stable id (``PL01`` ... ``PR02``), grouped into packs (``pallas``,
+    ``jax``, ``protocol``);
+  * ``FileContext`` — one parsed file: source, AST, per-line
+    ``# repro: noqa[RULE]`` suppressions, and a best-effort constant folder
+    seeded with module-level integer/float constants (``BR = 256`` etc.) so
+    rules can resolve tile shapes and grids built from named constants;
+  * ``analyze_paths`` / ``main`` — directory traversal (fixture snippets
+    under ``analysis_fixtures`` are excluded from tree walks but analyzable
+    by explicit path), human and JSON output, exit code 1 iff findings.
+
+Suppression syntax, on the offending line (or on comment-only lines
+immediately above it, for multi-line constructs)::
+
+    x = something_flagged()  # repro: noqa[JX01] reason why this is safe
+
+Multiple ids separate with commas; the reason text is free-form but
+required by convention (docs/ANALYSIS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence
+
+NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([A-Za-z0-9_,\s]+)\]")
+
+# directories never entered during tree walks (fixture snippets deliberately
+# violate the rules; explicit file arguments bypass this)
+DEFAULT_EXCLUDED_DIRS = {"analysis_fixtures", "__pycache__", ".git"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ConstEnv:
+    """Best-effort constant folding over a module's top-level bindings.
+
+    Resolves integer/float expressions built from literals, previously
+    resolved module constants, and ``+ - * // % **`` / unary minus. Anything
+    else (function parameters, shapes, calls) folds to None — rules must
+    treat None as "unknown, skip the numeric part of the check" so the
+    analyzer never guesses.
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.values: Dict[str, float] = {}
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name):
+                    val = self.fold(node.value)
+                    if val is not None:
+                        self.values[tgt.id] = val
+
+    def fold(self, node: ast.AST, local: Optional[Dict[str, float]] = None):
+        if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+            if isinstance(node.value, bool):
+                return None
+            return node.value
+        if isinstance(node, ast.Name):
+            if local and node.id in local:
+                return local[node.id]
+            return self.values.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self.fold(node.operand, local)
+            return None if v is None else -v
+        if isinstance(node, ast.BinOp):
+            lhs = self.fold(node.left, local)
+            rhs = self.fold(node.right, local)
+            if lhs is None or rhs is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return lhs + rhs
+                if isinstance(node.op, ast.Sub):
+                    return lhs - rhs
+                if isinstance(node.op, ast.Mult):
+                    return lhs * rhs
+                if isinstance(node.op, ast.FloorDiv):
+                    return lhs // rhs
+                if isinstance(node.op, ast.Div):
+                    return lhs / rhs
+                if isinstance(node.op, ast.Mod):
+                    return lhs % rhs
+                if isinstance(node.op, ast.Pow):
+                    return lhs**rhs
+            except (ZeroDivisionError, OverflowError, ValueError):
+                return None
+        return None
+
+    def fold_tuple(self, node: ast.AST, local=None) -> Optional[List[Optional[float]]]:
+        """Fold a tuple/list expression element-wise; None elements mark
+        unresolvable dims. Returns None when the node is not a tuple/list."""
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return [self.fold(el, local) for el in node.elts]
+        return None
+
+
+class FileContext:
+    """One source file as seen by every rule."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.consts = ConstEnv(tree)
+        # line -> set of suppressed rule ids (upper-cased)
+        self.noqa: Dict[int, set] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = NOQA_RE.search(line)
+            if m:
+                ids = {s.strip().upper() for s in m.group(1).split(",") if s.strip()}
+                self.noqa[i] = ids
+        # parent links let rules find enclosing functions
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parent(cur)
+        return None
+
+    def _noqa_matches(self, line: int, rule: str) -> bool:
+        ids = self.noqa.get(line)
+        return bool(ids) and (rule in ids or "ALL" in ids)
+
+    def suppressed(self, finding: Finding) -> bool:
+        rule = finding.rule.upper()
+        if self._noqa_matches(finding.line, rule):
+            return True
+        # a noqa may also sit on comment-only lines immediately above the
+        # finding — the only readable placement inside multi-line constructs
+        # like a BlockSpec list
+        i = finding.line - 1
+        while 1 <= i <= len(self.lines) and self.lines[i - 1].lstrip().startswith("#"):
+            if self._noqa_matches(i, rule):
+                return True
+            i -= 1
+        return False
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``pack``/``title`` and implement
+    ``check``; register with :func:`register`."""
+
+    id: str = ""
+    pack: str = ""
+    title: str = ""
+
+    def check(self, ctx: FileContext, options: "Options") -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class Options:
+    """Knobs shared by the CLI and the test harness."""
+
+    vmem_budget_bytes: int = 16 * 1024 * 1024
+    select: Optional[set] = None  # rule ids; None = all
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the global registry."""
+    rule = cls()
+    if not rule.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if rule.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.id}")
+    _REGISTRY[rule.id] = rule
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    _load_packs()
+    return dict(_REGISTRY)
+
+
+_PACKS_LOADED = False
+
+
+def _load_packs() -> None:
+    # import for the @register side effects; deferred so core can be imported
+    # by the rule modules themselves without a cycle
+    global _PACKS_LOADED
+    if _PACKS_LOADED:
+        return
+    _PACKS_LOADED = True
+    from repro.analysis import rules_jax, rules_pallas, rules_protocol  # noqa: F401
+
+
+def analyze_source(
+    path: str, source: str, options: Optional[Options] = None
+) -> List[Finding]:
+    """Analyze one file's source text; returns findings after noqa filtering.
+    Syntax errors surface as a single ``SYNTAX`` finding rather than a crash
+    so a broken file fails the gate visibly."""
+    options = options or Options()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("SYNTAX", path, e.lineno or 1, f"syntax error: {e.msg}")]
+    ctx = FileContext(path, source, tree)
+    findings: List[Finding] = []
+    for rule in all_rules().values():
+        if options.select and rule.id not in options.select:
+            continue
+        for f in rule.check(ctx, options):
+            if not ctx.suppressed(f):
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def analyze_file(path, options: Optional[Options] = None) -> List[Finding]:
+    p = Path(path)
+    return analyze_source(str(p), p.read_text(), options)
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_file():
+            yield p  # explicit files bypass the excludes (fixture tests rely on this)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not DEFAULT_EXCLUDED_DIRS.intersection(f.parts):
+                    yield f
+        else:
+            raise FileNotFoundError(raw)
+
+
+def analyze_paths(paths: Sequence[str], options: Optional[Options] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(analyze_file(f, options))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-native static analysis: Pallas kernel contracts, "
+        "JAX tracer hygiene, protocol invariants (docs/ANALYSIS.md).",
+    )
+    parser.add_argument("paths", nargs="*", default=["src"], help="files or directories")
+    parser.add_argument("--json", action="store_true", help="machine-readable output")
+    parser.add_argument(
+        "--select", default=None, help="comma-separated rule ids to run (default: all)"
+    )
+    parser.add_argument(
+        "--vmem-budget-mb",
+        type=float,
+        default=16.0,
+        help="VMEM budget for PL04 in MiB (default 16)",
+    )
+    parser.add_argument("--list-rules", action="store_true", help="print the rule catalogue")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(all_rules().values(), key=lambda r: r.id):
+            print(f"{rule.id}  [{rule.pack}]  {rule.title}")
+        return 0
+
+    options = Options(
+        vmem_budget_bytes=int(args.vmem_budget_mb * 1024 * 1024),
+        select={s.strip().upper() for s in args.select.split(",")} if args.select else None,
+    )
+    findings = analyze_paths(args.paths, options)
+    if args.json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        n_files = sum(1 for _ in iter_python_files(args.paths))
+        print(
+            f"repro.analysis: {len(findings)} finding(s) in {n_files} file(s)",
+            file=sys.stderr,
+        )
+    return 1 if findings else 0
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers used by the rule packs
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.lax.scan' for an Attribute/Name chain, '' when not a plain chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted_name(call.func)
+
+
+def tail_name(node: ast.AST) -> str:
+    """Last attribute segment: 'scan' for jax.lax.scan, the id for a Name."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def walk_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def local_assignments(fn: ast.AST) -> Dict[str, ast.AST]:
+    """name -> last assigned expression, single-target assigns only. Used to
+    deref e.g. ``grid = (rows // BR,)`` at a ``grid=grid`` call site."""
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                out[tgt.id] = node.value
+    return out
+
+
+def deref(node: Optional[ast.AST], env: Dict[str, ast.AST], depth: int = 4) -> Optional[ast.AST]:
+    """Follow Name -> assigned-expression chains a bounded number of steps."""
+    while depth > 0 and isinstance(node, ast.Name) and node.id in env:
+        nxt = env[node.id]
+        if nxt is node:
+            break
+        node = nxt
+        depth -= 1
+    return node

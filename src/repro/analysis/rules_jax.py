@@ -1,0 +1,568 @@
+"""JAX tracer-hygiene rules (pack ``jax``).
+
+Inside code that JAX traces (functions reaching ``jit`` / ``vmap`` /
+``lax.scan`` / ``pl.pallas_call`` call sites), Python-level control flow and
+host coercions on tracer values either crash with a
+``ConcretizationTypeError`` or — worse — silently bake one traced value into
+the compiled program (the bug class that made ``run_window``'s control plane
+fragile until it was pulled host-side). These rules build a module-local
+traced-reachability set and a conservative taint analysis:
+
+  * a function is *traced* when its name (or a lambda) is passed to a
+    tracing API or it is called, transitively, from a traced function in the
+    same module;
+  * a value is *tainted* (tracer-typed) when it derives from a traced
+    function's positional parameters or from ``pl.program_id``-style calls.
+    Keyword-only parameters and names in ``static_argnames`` are static by
+    construction (the repo binds them via ``functools.partial`` with
+    literals), and ``.shape`` / ``.dtype`` / ``.ndim`` / ``len()`` accesses
+    are static metadata — none of these taint.
+
+The taint set is deliberately an under-approximation: a finding is a real
+host/device boundary violation, while clean output is best-effort (closure
+captures of device arrays are not tracked). Host-side control planes (e.g.
+``_control_round``) are never flagged because nothing traces them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import (
+    Finding,
+    FileContext,
+    Options,
+    Rule,
+    call_name,
+    keyword_arg,
+    register,
+    tail_name,
+)
+
+# tracing APIs whose FIRST positional argument is traced
+FN_FIRST_ARG = {
+    "jit",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "remat",
+    "checkpoint",
+    "pallas_call",
+    "scan",  # jax.lax.scan(body, ...)
+    "while_loop",  # cond_fun
+    "custom_vjp",
+}
+# attribute reads that yield static metadata, not tracers
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding", "weak_type"}
+# calls whose results are tracers even without tainted arguments
+TRACER_SOURCES = {"program_id", "num_programs"}
+# annotation tails that mean "this positional param is (or may be) a traced
+# array"; anything else annotated (str, int, BlockSpec, ...) is declared
+# static by the author — the repo's convention for config params threaded
+# through traced code
+ARRAYISH_ANNOTATIONS = {"Array", "ndarray", "ArrayLike", "DeviceArray", "Any", "object"}
+IMPURE_PREFIXES = ("np.random.", "numpy.random.", "random.")
+IMPURE_CALLS = {
+    "time.time",
+    "time.perf_counter",
+    "time.monotonic",
+    "time.time_ns",
+    "datetime.now",
+    "datetime.datetime.now",
+}
+MUTATING_METHODS = {"append", "extend", "update", "pop", "setdefault", "insert", "clear"}
+
+
+@dataclasses.dataclass
+class TracedFn:
+    """One traced callable: a FunctionDef or a Lambda."""
+
+    name: str
+    node: ast.AST  # FunctionDef | Lambda
+    static_params: Set[str]
+
+    @property
+    def body(self) -> List[ast.AST]:
+        if isinstance(self.node, ast.Lambda):
+            return [self.node.body]
+        return self.node.body
+
+    def positional_params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in (a.posonlyargs + a.args)]
+
+    def kwonly_params(self) -> Set[str]:
+        return {p.arg for p in self.node.args.kwonlyargs}
+
+
+def _literal_str_elts(node: Optional[ast.AST]) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.add(el.value)
+    elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    return out
+
+
+def _fn_refs(node: ast.AST) -> Tuple[Optional[str], Optional[ast.Lambda], Set[str]]:
+    """Resolve a callable argument: (name, lambda, partial-bound kwargs)."""
+    if isinstance(node, ast.Name):
+        return node.id, None, set()
+    if isinstance(node, ast.Lambda):
+        return None, node, set()
+    if isinstance(node, ast.Call) and tail_name(node.func) == "partial" and node.args:
+        inner = node.args[0]
+        bound = {kw.arg for kw in node.keywords if kw.arg}
+        if isinstance(inner, ast.Name):
+            return inner.id, None, bound
+    return None, None, set()
+
+
+class TracedIndex:
+    """Module-local traced-reachability: roots from tracing call sites and
+    decorators, closed transitively over same-module calls by name."""
+
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        # every def (incl. nested) and every name-bound lambda, by name
+        self.defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef):
+                self.defs.setdefault(node.name, []).append(node)
+            elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.defs.setdefault(tgt.id, []).append(node.value)
+
+        self.static_of: Dict[str, Set[str]] = {}
+        roots: Set[str] = set()
+        self.lambda_roots: List[ast.Lambda] = []
+        self.scan_bodies: List[Tuple[ast.Call, Optional[str], Optional[ast.Lambda]]] = []
+        self.cond_sites: List[ast.Call] = []
+
+        def add_root(node: Optional[ast.AST]):
+            if node is None:
+                return
+            name, lam, bound = _fn_refs(node)
+            if name:
+                roots.add(name)
+                if bound:
+                    self.static_of.setdefault(name, set()).update(bound)
+            elif lam is not None:
+                self.lambda_roots.append(lam)
+
+        for call in (n for n in ast.walk(ctx.tree) if isinstance(n, ast.Call)):
+            tail = tail_name(call.func)
+            if tail in FN_FIRST_ARG and call.args:
+                add_root(call.args[0])
+                if tail in ("jit", "pmap"):
+                    name, _, _ = _fn_refs(call.args[0])
+                    if name:
+                        self.static_of.setdefault(name, set()).update(
+                            _literal_str_elts(keyword_arg(call, "static_argnames"))
+                        )
+            elif tail == "cond" and len(call.args) >= 3:
+                self.cond_sites.append(call)
+                add_root(call.args[1])
+                add_root(call.args[2])
+            elif tail == "while_loop" and len(call.args) >= 2:
+                add_root(call.args[0])
+                add_root(call.args[1])
+            elif tail == "fori_loop" and len(call.args) >= 3:
+                add_root(call.args[2])
+            elif tail == "switch" and len(call.args) >= 2:
+                branches = call.args[1]
+                if isinstance(branches, (ast.Tuple, ast.List)):
+                    for el in branches.elts:
+                        add_root(el)
+            if tail == "scan" and call.args:
+                name, lam, _ = _fn_refs(call.args[0])
+                self.scan_bodies.append((call, name, lam))
+
+        # decorator roots: @jax.jit, @functools.partial(jax.jit, ...)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            for dec in node.decorator_list:
+                d_tail = tail_name(dec if not isinstance(dec, ast.Call) else dec.func)
+                if d_tail in ("jit", "vmap", "pmap", "grad"):
+                    roots.add(node.name)
+                    if isinstance(dec, ast.Call):
+                        self.static_of.setdefault(node.name, set()).update(
+                            _literal_str_elts(keyword_arg(dec, "static_argnames"))
+                        )
+                elif d_tail == "partial" and isinstance(dec, ast.Call) and dec.args:
+                    inner = dec.args[0]
+                    if tail_name(inner) in ("jit", "vmap", "pmap"):
+                        roots.add(node.name)
+                        self.static_of.setdefault(node.name, set()).update(
+                            _literal_str_elts(keyword_arg(dec, "static_argnames"))
+                        )
+
+        # transitive closure over same-module calls by bare name
+        traced = set()
+        frontier = [r for r in roots if r in self.defs]
+        while frontier:
+            name = frontier.pop()
+            if name in traced:
+                continue
+            traced.add(name)
+            for fn in self.defs[name]:
+                for sub in ast.walk(fn):
+                    if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name):
+                        callee = sub.func.id
+                        if callee in self.defs and callee not in traced:
+                            frontier.append(callee)
+        self.traced_names = traced
+
+    def traced_fns(self) -> Iterator[TracedFn]:
+        for name in sorted(self.traced_names):
+            for node in self.defs[name]:
+                static = set(self.static_of.get(name, set()))
+                if isinstance(node, ast.FunctionDef):
+                    static |= {p.arg for p in node.args.kwonlyargs}
+                yield TracedFn(name, node, static)
+        for lam in self.lambda_roots:
+            yield TracedFn(f"<lambda@{lam.lineno}>", lam, set())
+
+
+def _annotated_static(param: ast.arg) -> bool:
+    """A positional param annotated with a non-array type (str, int, a config
+    dataclass) is static by declaration."""
+    ann = param.annotation
+    if isinstance(ann, (ast.Name, ast.Attribute)):
+        return tail_name(ann) not in ARRAYISH_ANNOTATIONS
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        tail = ann.value.split("[")[0].split(".")[-1].strip()
+        return tail not in ARRAYISH_ANNOTATIONS
+    return False  # unannotated / container annotations: may hold arrays
+
+
+def _depends(node: ast.AST, tainted: Set[str]) -> bool:
+    """Does ``node`` read a tainted name outside static-metadata accesses?"""
+    if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id == "len":
+            return False
+        # method calls: the receiver may still be tainted (x.sum()); only the
+        # .shape-style chains above are static
+    if isinstance(node, ast.Compare):
+        # `x is None` is a host-side identity check, never a traced value
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return False
+        # `key in pytree` with a static key inspects dict *structure*
+        if all(
+            isinstance(op, (ast.In, ast.NotIn)) for op in node.ops
+        ) and not _depends(node.left, tainted):
+            return False
+        # equality against a string constant is config dispatch, not math
+        if any(
+            isinstance(c, ast.Constant) and isinstance(c.value, str)
+            for c in [node.left, *node.comparators]
+        ):
+            return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    return any(_depends(child, tainted) for child in ast.iter_child_nodes(node))
+
+
+def _taint_names(target: ast.AST) -> Iterator[str]:
+    """Names bound by an assignment target. For ``d[k] = v`` only the
+    container ``d`` becomes tainted — the index ``k`` is read, not bound."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            yield from _taint_names(el)
+    elif isinstance(target, ast.Starred):
+        yield from _taint_names(target.value)
+    elif isinstance(target, (ast.Subscript, ast.Attribute)):
+        base = target.value
+        while isinstance(base, (ast.Subscript, ast.Attribute)):
+            base = base.value
+        if isinstance(base, ast.Name):
+            yield base.id
+
+
+def taint_set(fn: TracedFn) -> Set[str]:
+    """Params minus statics, plus anything assigned from tainted expressions
+    or tracer sources; two ordered passes approximate the fixpoint."""
+    a = fn.node.args
+    tainted = {
+        p.arg for p in (a.posonlyargs + a.args) if not _annotated_static(p)
+    } - fn.static_params
+    for _ in range(2):
+        for node in ast.walk(fn.node):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = node.value
+                if value is None:
+                    continue
+                targets = (
+                    node.targets if isinstance(node, ast.Assign) else [node.target]
+                )
+                is_source = isinstance(value, ast.Call) and tail_name(
+                    value.func
+                ) in TRACER_SOURCES
+                if is_source or _depends(value, tainted):
+                    for tgt in targets:
+                        tainted.update(_taint_names(tgt))
+    return tainted
+
+
+def _traced_index(ctx: FileContext) -> TracedIndex:
+    # cache on the context: four rules share one reachability build
+    idx = getattr(ctx, "_traced_index", None)
+    if idx is None:
+        idx = TracedIndex(ctx)
+        ctx._traced_index = idx
+    return idx
+
+
+@register
+class HostCoercion(Rule):
+    """JX01: ``int()``/``float()``/``bool()`` on a tracer raises a
+    ConcretizationTypeError under jit — or, under ``lax.scan``'s tracing of
+    the first iteration, silently freezes iteration-0's value into every
+    step. Host-side coercions belong in the control plane, before the traced
+    boundary."""
+
+    id = "JX01"
+    pack = "jax"
+    title = "int()/float()/bool() on a traced value"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        idx = _traced_index(ctx)
+        for fn in idx.traced_fns():
+            tainted = taint_set(fn)
+            for node in ast.walk(fn.node):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in ("int", "float", "bool", "complex")
+                    and node.args
+                    and _depends(node.args[0], tainted)
+                ):
+                    yield Finding(
+                        self.id,
+                        ctx.path,
+                        node.lineno,
+                        f"{node.func.id}() applied to traced value inside "
+                        f"'{fn.name}' — hoist to the host control plane or use "
+                        "jnp casts",
+                    )
+
+
+@register
+class PythonControlFlow(Rule):
+    """JX02: Python ``if``/``while``/``assert`` branching on a tracer is
+    evaluated ONCE at trace time — the compiled program keeps whichever
+    branch the tracer happened to take. Use ``lax.cond`` / ``lax.select`` /
+    ``pl.when``. (Branching on ``.shape``/``.dtype`` or static kwargs is
+    fine and not flagged.)"""
+
+    id = "JX02"
+    pack = "jax"
+    title = "Python control flow on a traced value"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        idx = _traced_index(ctx)
+        for fn in idx.traced_fns():
+            tainted = taint_set(fn)
+            for node in ast.walk(fn.node):
+                test = None
+                kind = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test, kind = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                if test is not None and _depends(test, tainted):
+                    yield Finding(
+                        self.id,
+                        ctx.path,
+                        node.lineno,
+                        f"Python {kind} on traced value inside '{fn.name}' — "
+                        "use lax.cond/lax.select (or pl.when in kernels)",
+                    )
+
+
+@register
+class ImpureTracedCall(Rule):
+    """JX03: ``numpy.random``/``time``/``datetime`` calls inside traced code
+    execute once at trace time and the result is burned into the compiled
+    program as a constant — every subsequent call replays it. Randomness
+    must come through ``jax.random`` keys (or the keyed fate stream);
+    timing belongs outside the traced boundary."""
+
+    id = "JX03"
+    pack = "jax"
+    title = "trace-time host side effect (numpy.random / time / datetime)"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        idx = _traced_index(ctx)
+        for fn in idx.traced_fns():
+            for node in ast.walk(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if name in IMPURE_CALLS or name.startswith(IMPURE_PREFIXES):
+                    yield Finding(
+                        self.id,
+                        ctx.path,
+                        node.lineno,
+                        f"'{name}' inside traced '{fn.name}' runs once at "
+                        "trace time and is constant thereafter",
+                    )
+
+
+@register
+class ScanCarryMutation(Rule):
+    """JX04: mutating the carry inside a ``lax.scan`` body (item assignment,
+    ``.append``/``.update``/... on carry-derived names) either crashes (JAX
+    arrays are immutable) or — for Python dict/list carries — leaks state
+    across the traced iteration boundary so every step sees trace-time
+    contents. Carries must be rebuilt functionally (``.at[].set``, fresh
+    pytrees)."""
+
+    id = "JX04"
+    pack = "jax"
+    title = "scan carry mutated inside the body"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        idx = _traced_index(ctx)
+        for call, name, lam in idx.scan_bodies:
+            body_fns: List[ast.AST] = []
+            if lam is not None:
+                body_fns.append(lam)
+            elif name and name in idx.defs:
+                body_fns.extend(idx.defs[name])
+            for fn in body_fns:
+                params = (
+                    [a.arg for a in fn.args.args] if fn.args.args else []
+                )
+                if not params:
+                    continue
+                carry_names = {params[0]}
+                # names unpacked from the carry: `a, b = carry`
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Assign) and isinstance(node.value, ast.Name):
+                        if node.value.id in carry_names:
+                            for tgt in node.targets:
+                                carry_names.update(_taint_names(tgt))
+                for node in ast.walk(fn):
+                    if isinstance(node, (ast.Assign, ast.AugAssign)):
+                        targets = (
+                            node.targets
+                            if isinstance(node, ast.Assign)
+                            else [node.target]
+                        )
+                        for tgt in targets:
+                            if (
+                                isinstance(tgt, ast.Subscript)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id in carry_names
+                            ):
+                                yield Finding(
+                                    self.id,
+                                    ctx.path,
+                                    node.lineno,
+                                    f"scan body mutates carry "
+                                    f"'{tgt.value.id}' by item assignment — "
+                                    "rebuild with .at[].set()",
+                                )
+                    elif isinstance(node, ast.Call):
+                        f = node.func
+                        if (
+                            isinstance(f, ast.Attribute)
+                            and f.attr in MUTATING_METHODS
+                            and isinstance(f.value, ast.Name)
+                            and f.value.id in carry_names
+                        ):
+                            yield Finding(
+                                self.id,
+                                ctx.path,
+                                node.lineno,
+                                f"scan body mutates carry '{f.value.id}' via "
+                                f".{f.attr}() — carries must be rebuilt "
+                                "functionally",
+                            )
+                    elif isinstance(node, ast.Delete):
+                        for tgt in node.targets:
+                            if (
+                                isinstance(tgt, ast.Subscript)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id in carry_names
+                            ):
+                                yield Finding(
+                                    self.id,
+                                    ctx.path,
+                                    node.lineno,
+                                    f"scan body deletes from carry "
+                                    f"'{tgt.value.id}'",
+                                )
+
+
+def _return_tree(node: ast.AST):
+    """Structural pytree skeleton of a return expression: nested tuple
+    arities, with None leaves for anything opaque."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [_return_tree(el) for el in node.elts]
+    return None
+
+
+def _trees_conflict(a, b) -> bool:
+    if a is None or b is None:
+        return False  # opaque: could be anything — never guess
+    if len(a) != len(b):
+        return True
+    return any(_trees_conflict(x, y) for x, y in zip(a, b))
+
+
+@register
+class CondPytreeMismatch(Rule):
+    """JX05: ``lax.cond`` branches must return identical pytree structures;
+    a mismatch is a trace-time TypeError whose message points at neither
+    branch. Checked structurally for lambda / same-module function branches
+    whose returns are literal tuples; opaque returns are skipped."""
+
+    id = "JX05"
+    pack = "jax"
+    title = "lax.cond branches return mismatched pytree structures"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        idx = _traced_index(ctx)
+        for call in idx.cond_sites:
+            trees = []
+            for branch in call.args[1:3]:
+                name, lam, _ = _fn_refs(branch)
+                if lam is not None:
+                    trees.append(_return_tree(lam.body))
+                elif name and name in idx.defs:
+                    fn = idx.defs[name][0]
+                    rets = [
+                        n.value
+                        for n in ast.walk(fn)
+                        if isinstance(n, ast.Return) and n.value is not None
+                    ]
+                    trees.append(_return_tree(rets[0]) if rets else None)
+                else:
+                    trees.append(None)
+            if len(trees) == 2 and _trees_conflict(trees[0], trees[1]):
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    call.lineno,
+                    "lax.cond branches return different pytree structures "
+                    f"({_arity(trees[0])} vs {_arity(trees[1])} elements)",
+                )
+
+
+def _arity(tree) -> str:
+    return "opaque" if tree is None else str(len(tree))

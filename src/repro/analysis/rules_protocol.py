@@ -1,0 +1,195 @@
+"""IPLS protocol-invariant rules (pack ``protocol``).
+
+The scalar pubsub engine (``p2p/ipfs_sim.py`` + ``fl/rounds.py``) and the
+vectorized engine (``fl/vectorized.py``) are kept provably equivalent by two
+conventions that nothing type-checks:
+
+  * **Keyed fates** — every message fate is drawn from the counter-based
+    stream keyed by the full tuple ``(channel, round, agent, part[, peer])``.
+    A draw site that omits part of the key collapses distinct messages onto
+    one fate and silently desynchronizes the engines (the PR-1 pubsub
+    double-fan-out bug was exactly this class).
+  * **Counter symmetry** — every site that bumps a traffic counter
+    (``messages_sent`` / ``messages_dropped`` / byte totals) must have a
+    declared counterpart in the other engine, recorded in the ``SYMMETRY``
+    table below. An undeclared increment is a counter the equivalence tests
+    can drift on; a stale declaration is a site someone deleted without
+    updating the mirror.
+
+When adding an accounting site, add it here together with its counterpart
+(`tests/test_analysis.py` asserts the table stays two-sided).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from repro.analysis.core import Finding, FileContext, Options, Rule, register
+
+FATE_DRAW_METHODS = {"draw", "draw_one", "draw_window"}
+# (channel, round, agent, part) — peer optional for point-to-point channels
+MIN_KEY_ARITY = 4
+
+# traffic counters, as they appear as attribute/subscript targets
+COUNTERS = {
+    "messages_sent",
+    "messages_dropped",
+    "bytes_total",
+    "_bytes_total",
+    "bytes_sent",
+    "bytes_recv",
+}
+
+# Declared-symmetry table: path suffix -> function -> counters it bumps.
+# The scalar block and the vectorized block mirror each other; equivalence
+# tests (test_lossy_equivalence) rely on both sides counting the same events.
+SYMMETRY: Dict[str, Dict[str, Set[str]]] = {
+    # scalar engine: per-message accounting in the pubsub transport
+    "p2p/ipfs_sim.py": {
+        "publish": {"messages_sent", "messages_dropped", "bytes_sent"},
+        "send": {"messages_sent", "messages_dropped", "bytes_sent"},
+        "tick": {"messages_dropped", "bytes_recv"},
+    },
+    # vectorized engine: per-round bulk accounting from the device counters
+    "fl/vectorized.py": {
+        "_run_round_lossy": {"messages_sent", "messages_dropped", "_bytes_total"},
+        "_run_window_lossy": {"messages_sent", "messages_dropped", "_bytes_total"},
+        "_perfect_traffic": {"messages_sent", "_bytes_total"},
+    },
+}
+
+# engine side of each declared file, used by the table self-check
+ENGINE_SIDE = {"p2p/ipfs_sim.py": "scalar", "fl/vectorized.py": "vectorized"}
+
+_FAMILY = {
+    "messages_sent": "messages_sent",
+    "messages_dropped": "messages_dropped",
+    "bytes_total": "bytes",
+    "_bytes_total": "bytes",
+    "bytes_sent": "bytes",
+    "bytes_recv": "bytes",
+}
+
+
+def symmetry_is_balanced() -> Dict[str, Set[str]]:
+    """Counter families present per engine side; a balanced table has the
+    same families on both sides. Exposed for the meta-test."""
+    sides: Dict[str, Set[str]] = {"scalar": set(), "vectorized": set()}
+    for suffix, funcs in SYMMETRY.items():
+        side = ENGINE_SIDE[suffix]
+        for counters in funcs.values():
+            sides[side].update(_FAMILY[c] for c in counters)
+    return sides
+
+
+def _counter_target(node: ast.AST) -> Optional[str]:
+    """Base counter name of an AugAssign target, unwrapping subscripts."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in COUNTERS:
+        return node.attr
+    if isinstance(node, ast.Name) and node.id in COUNTERS:
+        return node.id
+    return None
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+def _declared_for(path: str) -> Optional[Dict[str, Set[str]]]:
+    p = _norm(path)
+    for suffix, funcs in SYMMETRY.items():
+        if p.endswith(suffix):
+            return funcs
+    return None
+
+
+@register
+class FateKeyTuple(Rule):
+    """PR01: a ``.draw()``/``.draw_one()``/``.draw_window()`` call on the
+    fate stream must pass the full key — at least (channel, round, agent,
+    part); peer-addressed channels add the peer. Fewer arguments means two
+    distinct messages share one fate draw and the scalar/vectorized engines
+    diverge under loss."""
+
+    id = "PR01"
+    pack = "protocol"
+    title = "fate draw missing part of the key tuple"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in FATE_DRAW_METHODS
+            ):
+                continue
+            if any(isinstance(a, ast.Starred) for a in node.args):
+                continue  # arity unknowable statically
+            arity = len(node.args) + len([k for k in node.keywords if k.arg])
+            if arity < MIN_KEY_ARITY:
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    node.lineno,
+                    f".{node.func.attr}() called with {arity} key argument(s);"
+                    " the fate key is (channel, round, agent, part[, peer])"
+                    " — a partial key aliases distinct messages onto one fate",
+                )
+
+
+@register
+class CounterSymmetry(Rule):
+    """PR02: every ``+=`` on a traffic counter must be a declared site in
+    the ``SYMMETRY`` table (with its counterpart in the other engine), and
+    every declared site must still exist. Flags both undeclared increments
+    and stale declarations (function present, declared counter gone)."""
+
+    id = "PR02"
+    pack = "protocol"
+    title = "traffic-counter site not declared in the symmetry table"
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        declared = _declared_for(ctx.path) or {}
+
+        # actual sites: function -> counters bumped (plus finding positions)
+        actual: Dict[str, Set[str]] = {}
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.AugAssign):
+                continue
+            counter = _counter_target(node.target)
+            if counter is None:
+                continue
+            fn = ctx.enclosing_function(node)
+            fn_name = fn.name if fn is not None else "<module>"
+            actual.setdefault(fn_name, set()).add(counter)
+            if counter not in declared.get(fn_name, set()):
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    node.lineno,
+                    f"'{counter} +=' in '{fn_name}' is not declared in "
+                    "rules_protocol.SYMMETRY — declare it together with its "
+                    "counterpart in the other engine",
+                )
+
+        # stale declarations: function still exists but a declared counter
+        # site is gone (a wholly absent function is treated as a partial
+        # file, e.g. a fixture, and skipped)
+        fn_defs = {
+            n.name: n for n in ast.walk(ctx.tree) if isinstance(n, ast.FunctionDef)
+        }
+        for fn_name, counters in declared.items():
+            fn = fn_defs.get(fn_name)
+            if fn is None:
+                continue
+            for counter in sorted(counters - actual.get(fn_name, set())):
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    fn.lineno,
+                    f"SYMMETRY declares '{counter} +=' in '{fn_name}' but no "
+                    "such site exists — update the table (and its mirror in "
+                    "the other engine)",
+                )

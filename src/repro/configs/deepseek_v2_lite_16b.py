@@ -2,7 +2,6 @@
 MLA (kv_lora 512, qk_nope 128, qk_rope 64, v_head 128). Layer 0 is dense
 (d_ff 10944); layers 1-26 are MoE: 64 routed experts top-6 + 2 shared
 experts, d_expert 1408 (SwiGLU). vocab 102400."""
-import dataclasses
 
 from repro.configs.base import mlp_block, moe_block
 from repro.models import layers as L

@@ -9,7 +9,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.transformer import ArchConfig, TransformerLM
+from repro.models.transformer import TransformerLM
 from repro.models.whisper import WhisperConfig, WhisperModel
 
 ARCH_MODULES = {

@@ -26,12 +26,11 @@ from repro.core.api import (
     UPDATE_TOPIC,
     reset_registry,
 )
-from repro.core.partition import PartitionSpec, PartitionTable
+from repro.core.partition import PartitionSpec, PartitionTable, flatten_params
 from repro.fl.local_trainer import LocalTrainer
 from repro.models import mlp_mnist
-from repro.core.partition import flatten_params
 from repro.p2p.ipfs_sim import SimIPFS
-from repro.p2p.network import NetworkConditions, PERFECT
+from repro.p2p.network import PERFECT, NetworkConditions
 
 # the simulation ticks the substrate 4 times per training round (after the
 # fetch requests, the fetch replies, the UpdateModel sends, and the

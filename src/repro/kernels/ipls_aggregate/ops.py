@@ -1,7 +1,6 @@
 """jit'd public wrappers for the fused IPLS aggregation kernels."""
 from __future__ import annotations
 
-import jax
 
 from repro.kernels.ipls_aggregate.ipls_aggregate import (
     ipls_aggregate,

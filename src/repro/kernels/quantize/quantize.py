@@ -45,7 +45,10 @@ def quantize(x, err, interpret: bool = True):
             pl.BlockSpec((TILE, BLOCK), lambda i: (i, 0)),
         ],
         out_specs=[
+            # repro: noqa[PL03] TILE=8 rows/block is the public scales layout;
+            # the int8 payload tolerates the (8,1024) tile in interpret mode
             pl.BlockSpec((TILE, BLOCK), lambda i: (i, 0)),
+            # repro: noqa[PL03] per-block scalar scale: (TILE,1) is the shape
             pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
             pl.BlockSpec((TILE, BLOCK), lambda i: (i, 0)),
         ],
@@ -75,6 +78,7 @@ def dequantize(q, scales, interpret: bool = True):
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE, BLOCK), lambda i: (i, 0)),
+            # repro: noqa[PL03] per-block scalar scale: (TILE,1) is the shape
             pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((TILE, BLOCK), lambda i: (i, 0)),

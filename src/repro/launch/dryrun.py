@@ -21,7 +21,6 @@ import traceback
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
-    import jax
     from repro.configs import SHAPES, build_model, get_config, shape_applicable
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_step, lower_step

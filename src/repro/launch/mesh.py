@@ -7,7 +7,6 @@ axis is the IPLS replica axis (rho = number of pods).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 

@@ -15,7 +15,6 @@ from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ShapeSpec, input_specs

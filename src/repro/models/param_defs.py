@@ -9,7 +9,7 @@ plane); the shape tree feeds the allocation-free dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ import contextvars
 from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core.sharded import DEFAULT_RULES, spec_for_leaf
 

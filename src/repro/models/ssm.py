@@ -12,10 +12,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.param_defs import ParamDef
-from repro.models.layers import init_rmsnorm, rms_norm, init_mlp, MLPSpec, apply_mlp
+from repro.models.layers import init_rmsnorm, rms_norm
 
 # ---------------------------------------------------------------------------
 # Mamba2 (SSD — state-space duality chunked algorithm, arXiv:2405.21060)

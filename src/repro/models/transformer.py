@@ -16,7 +16,6 @@ Three execution modes per block:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -220,6 +219,8 @@ def apply_block_prefill(b: BlockSpec, p, x, ctx):
         keep = min(T, Sq)
         kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, -keep:], 0, axis=1)
         vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, -keep:], 0, axis=1)
+        # repro: noqa[JX02] T derives from ctx["cache_len"], a host int
+        # threaded through the ctx dict; only the positions entries trace
         if s.window is not None and keep == T:
             # ring-buffer alignment: token at absolute position p lives at
             # slot p % T, matching decode's slot = pos % T

@@ -20,7 +20,7 @@ Design notes for the IPLS / ZeRO-1 mapping (core/sharded.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
-import numpy as np
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

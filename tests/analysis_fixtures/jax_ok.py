@@ -1,0 +1,44 @@
+"""No-fire twin for the jax pack: the same intents expressed with static
+arguments, shape metadata, functional carries, and matched cond branches."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def f(x, mode):
+    # branching on a static_argnames kwarg is resolved at trace time
+    if mode == "double":
+        return x * 2
+    # branching on shape metadata is static
+    if x.shape[0] > 1:
+        return jnp.sum(x)
+    return x
+
+
+@jax.jit
+def relu_right(x):
+    return jnp.where(x > 0, x, 0.0)
+
+
+@jax.jit
+def coerce_static(x):
+    # int() of a shape dimension is host-side arithmetic
+    n = int(x.shape[0])
+    return x * n
+
+
+def body(carry, x):
+    total, count = carry
+    if x is None:  # identity checks are host-side
+        return (total, count), 0.0
+    return (total + x, count + 1), total
+
+
+def run(xs):
+    return jax.lax.scan(body, (0.0, 0), xs)
+
+
+def step(pred, x):
+    return jax.lax.cond(pred, lambda: (x, x), lambda: (x * 2, x))

@@ -1,0 +1,7 @@
+"""JX01 fire: int() coercion of a traced argument under jit."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return x + int(x)

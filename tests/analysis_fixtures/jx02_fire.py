@@ -1,0 +1,9 @@
+"""JX02 fire: Python if on a traced value inside a jitted function."""
+import jax
+
+
+@jax.jit
+def relu_wrong(x):
+    if x > 0:
+        return x
+    return 0.0 * x

@@ -1,0 +1,8 @@
+"""JX03 fire: numpy.random inside traced code runs once at trace time."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def noisy(x):
+    return x + np.random.normal()

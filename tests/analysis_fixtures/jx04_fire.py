@@ -1,0 +1,13 @@
+"""JX04 fire: scan body mutates its carry (dict update + item assignment)."""
+import jax
+
+
+def body(carry, x):
+    carry.update(last=x)
+    state = carry
+    state["n"] += 1
+    return carry, x
+
+
+def run(xs):
+    return jax.lax.scan(body, {"n": 0}, xs)

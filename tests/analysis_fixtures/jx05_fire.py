@@ -1,0 +1,6 @@
+"""JX05 fire: lax.cond branches return pytrees of different arity."""
+import jax
+
+
+def step(pred, x):
+    return jax.lax.cond(pred, lambda: (x, x), lambda: (x,))

@@ -1,0 +1,11 @@
+"""Suppression fixture: each violation carries a reasoned noqa — the file
+must analyze clean, proving same-line and preceding-comment placement."""
+import jax
+
+
+@jax.jit
+def f(x):
+    if x > 0:  # repro: noqa[JX02] fixture: demonstrates same-line suppression
+        return x
+    # repro: noqa[JX01] fixture: demonstrates preceding-comment suppression
+    return int(x) * x

@@ -1,0 +1,18 @@
+"""PL03 fire: float32 block with a 64-wide lane dimension (native is 128)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 64), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 64), jnp.float32),
+    )(x)

@@ -1,0 +1,19 @@
+"""PL04 fire: double-buffered f32 blocks of 8 MiB each blow the 16 MiB
+VMEM budget (2 x 8 in + 2 x 8 out = 32 MiB)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def run(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((2048, 1024), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2048, 1024), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2048, 1024), jnp.float32),
+    )(x)

@@ -1,0 +1,19 @@
+"""PL05 fire: the output block is revisited across the reduction axis j
+(its index_map ignores j) but the kernel accumulates without @pl.when."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def acc_kernel(x_ref, o_ref):
+    o_ref[...] += x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        acc_kernel,
+        grid=(2, 4),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+    )(x)

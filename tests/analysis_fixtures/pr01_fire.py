@@ -1,0 +1,8 @@
+"""PR01 fire: fate drawn with a partial key — round and part are missing,
+so every message this agent sends shares one fate."""
+CH_UPDATE = 1
+
+
+def deliver(fates, agent):
+    delivered, delay = fates.draw(CH_UPDATE, agent)
+    return delivered, delay

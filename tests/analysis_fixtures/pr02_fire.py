@@ -1,0 +1,11 @@
+"""PR02 fire: a traffic-counter increment nobody declared in the
+symmetry table."""
+
+
+class RogueEngine:
+    def __init__(self):
+        self.messages_sent = 0
+
+    def deliver(self, msg):
+        self.messages_sent += 1
+        return msg

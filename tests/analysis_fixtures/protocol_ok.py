@@ -1,0 +1,23 @@
+"""No-fire twin for the protocol pack: full fate keys, no undeclared
+counter sites."""
+CH_UPDATE = 1
+CH_REPLICA = 4
+
+
+def deliver(fates, rnd, agent, part, peer):
+    de, dl = fates.draw(CH_UPDATE, rnd, agent, part)
+    de2, dl2 = fates.draw_one(CH_REPLICA, rnd, agent, part, peer)
+    de3, dl3 = fates.draw_window(CH_UPDATE, rnd, agent, part, peer=peer)
+    return de and de2 and de3, dl + dl2 + dl3
+
+
+class Engine:
+    def __init__(self):
+        # plain initialization is not an accounting site
+        self.messages_sent = 0
+        self.local_hits = 0
+
+    def deliver(self, msg):
+        # only the declared traffic counters are protocol state
+        self.local_hits += 1
+        return msg

@@ -1,10 +1,8 @@
 """Aggregation math: eps updates, masked mean, staleness decay."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.aggregation import (
-    EpsState,
     aggregate_partition,
     apply_staleness_decay,
     init_eps,

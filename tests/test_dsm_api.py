@@ -2,7 +2,6 @@
 Init / UpdateModel / LoadModel / Terminate, fetch warm-up, replica sync,
 and the paper's traffic bound (per-agent bytes <= 2|M| per round)."""
 import numpy as np
-import pytest
 
 from repro.core.api import IPLSAgent, reset_registry
 from repro.core.partition import PartitionSpec, PartitionTable

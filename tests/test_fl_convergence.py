@@ -1,6 +1,5 @@
 """FL-level behaviour: IPLS converges and tracks centralized FedAvg
 (the paper's Fig 2 claim, scaled down for CI speed)."""
-import numpy as np
 import pytest
 
 from repro.data import iid_split, synth_mnist

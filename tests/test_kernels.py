@@ -125,7 +125,7 @@ def test_linear_scan(shape, dtype):
 # --- quantize ----------------------------------------------------------------------
 @pytest.mark.parametrize("N", [8192, 100000])
 def test_quantize_matches_ref_and_error_feedback(N):
-    from repro.kernels.quantize.ops import compress, decompress
+    from repro.kernels.quantize.ops import compress
     from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
 
     x = jnp.asarray(RNG.standard_normal(N), jnp.float32)

@@ -1,8 +1,8 @@
 """IPFS-substitute substrate: store, pub/sub, loss/delay, determinism."""
 import numpy as np
 
-from repro.p2p.ipfs_sim import ContentStore, PubSub, SimIPFS
-from repro.p2p.network import LOSSY, PERFECT, NetworkConditions
+from repro.p2p.ipfs_sim import ContentStore, PubSub
+from repro.p2p.network import PERFECT, NetworkConditions
 
 
 def test_content_store_roundtrip():

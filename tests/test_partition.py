@@ -1,5 +1,4 @@
 """Partition-table tests, including the paper's own worked example (§2.1)."""
-import pytest
 
 from repro.core.partition import PartitionSpec, PartitionTable, flatten_params, unflatten_params
 

@@ -33,6 +33,7 @@ def test_partition_invariants_under_churn(k, pi, rho, ops, data):
             live.add(next_id)
             next_id += 1
         else:
+            # repro: noqa[PR01] hypothesis strategy draw, not a fate stream
             victim = data.draw(st.sampled_from(sorted(live)))
             if op == 1:
                 t.leave(victim)

@@ -3,7 +3,6 @@ programs (this is what makes the roofline table honest for scanned models)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.roofline.hlo_cost import analyze_hlo_text
 

@@ -8,13 +8,12 @@ matches the scalar pubsub oracle to float tolerance with exact traffic
 counters. Eval can additionally be thinned to a cadence without perturbing
 the training trajectory.
 """
-import dataclasses
 
 import numpy as np
 import pytest
 
 from repro.data import iid_split, synth_mnist
-from repro.fl import IPLSSimulation, SimConfig, make_simulation
+from repro.fl import SimConfig, make_simulation
 from repro.p2p.network import LOSSY, NetworkConditions
 
 # scanned vs unscanned is the same arithmetic in a different dispatch

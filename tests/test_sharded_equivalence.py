@@ -4,7 +4,6 @@ the 1-device smoke mesh (same code path as the 256-chip mesh)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core.sharded import (

@@ -4,7 +4,6 @@ train-step built end-to-end through the launcher on the smoke mesh."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import iid_split, synth_mnist
 from repro.fl import IPLSSimulation, SimConfig
