@@ -1,14 +1,17 @@
 """Paper Fig 2a/2b: model-training convergence, IPLS vs centralized FL for
 10/25/50 agents over 40 rounds; the accuracy 'drop due to decentralisation'
-must vanish (paper: < 1 per-mille after 40 iterations)."""
+must vanish (paper: < 1 per-mille after 40 iterations). An int8-wire overlay
+tracks the same trajectory on the quantized delta plane — error feedback
+must keep its final accuracy within 1e-3 of the f32 run."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import List
 
 from benchmarks.common import csv_row, load_data, save_json
 from repro.data import iid_split
-from repro.fl import IPLSSimulation, SimConfig, run_centralized
+from repro.fl import IPLSSimulation, SimConfig, make_simulation, run_centralized
 
 
 def run(rounds: int = 40, agent_counts=(10, 25, 50), out_json: str | None = None) -> List[str]:
@@ -25,19 +28,35 @@ def run(rounds: int = 40, agent_counts=(10, 25, 50), out_json: str | None = None
         hist = IPLSSimulation(cfg, shards, x_te, y_te).run()
         t_ipls = time.time() - t0
         hist_c = run_centralized(shards, x_te, y_te, rounds=rounds, local_iters=10)
+        # int8-wire overlay on the (equivalence-proven) vectorized engine
+        cfg_q = dataclasses.replace(cfg, wire_dtype="int8", engine="vectorized")
+        t0 = time.time()
+        hist_q = make_simulation(cfg_q, shards, x_te, y_te).run()
+        t_int8 = time.time() - t0
         acc_i = hist[-1]["acc_mean"]
         acc_c = hist_c[-1]["acc_mean"]
+        acc_q = hist_q[-1]["acc_mean"]
         drop_permille = (acc_c - acc_i) / max(acc_c, 1e-9) * 1000.0
+        int8_drop = acc_i - acc_q
         results[n] = {
             "ipls": [h["acc_mean"] for h in hist],
             "central": [h["acc_mean"] for h in hist_c],
+            "ipls_int8": [h["acc_mean"] for h in hist_q],
             "final_drop_permille": drop_permille,
+            "int8_drop_vs_f32": int8_drop,
         }
         rows.append(
             csv_row(
                 f"fig2_convergence_n{n}",
                 t_ipls / rounds * 1e6,
                 f"acc_ipls={acc_i:.4f};acc_central={acc_c:.4f};drop_permille={drop_permille:.2f}",
+            )
+        )
+        rows.append(
+            csv_row(
+                f"fig2_convergence_int8_n{n}",
+                t_int8 / rounds * 1e6,
+                f"acc_int8={acc_q:.4f};drop_vs_f32={int8_drop:.5f}",
             )
         )
     if out_json:

@@ -145,6 +145,47 @@ def run(
                     f"dispatches_per_round={d_scan:.3f}",
                 )
             )
+    # quantized wire plane: the same LOSSY round loop with f32 vs int8
+    # transport — bytes_per_round is what the codec removes from the wire,
+    # seconds_per_round what the quantize/fused-dequantize stages add
+    n = lossy_agent_counts[0]
+    shards = iid_split(x_tr, y_tr, n, seed=0)
+    wire_stats = {}
+    for wd in ("f32", "int8"):
+        cfg = SimConfig(
+            num_agents=n, num_partitions=10, pi=2, rho=2,
+            local_iters=2, batch_size=64, eval_agents=4,
+            conditions=LOSSY, wire_dtype=wd,
+            engine="vectorized", rounds=1 + rounds,
+        )
+        sim = make_simulation(cfg, shards, x_te, y_te)
+        sim.run_round(0)  # jit warm-up outside the timed/byte window
+        _sync(sim)
+        b0 = sim._bytes_total
+        t0 = time.perf_counter()
+        for r in range(1, 1 + rounds):
+            sim.run_round(r)
+        _sync(sim)
+        wire_stats[wd] = (
+            (time.perf_counter() - t0) / rounds,
+            (sim._bytes_total - b0) / rounds,
+        )
+    ratio = wire_stats["f32"][1] / wire_stats["int8"][1]
+    for wd, (s_w, bpr) in wire_stats.items():
+        extra = f";bytes_ratio_vs_f32={ratio:.2f}x" if wd == "int8" else ""
+        results[f"wire_{wd}_lossy_n{n}"] = {
+            "rounds_per_s": 1.0 / s_w,
+            "bytes_per_round": bpr,
+            **({"bytes_ratio_vs_f32": ratio} if wd == "int8" else {}),
+        }
+        rows.append(
+            csv_row(
+                f"rounds_wire_{wd}_lossy_n{n}",
+                s_w * 1e6,
+                f"rounds_per_s={1/s_w:.2f};bytes_per_round={bpr:.0f}" + extra,
+            )
+        )
+
     # the static-analysis gate's own cost, kept visible in the perf
     # trajectory next to the numbers it guards
     repo = Path(__file__).resolve().parents[1]

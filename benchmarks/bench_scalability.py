@@ -18,7 +18,7 @@ from repro.core.partition import flatten_params
 def run(rounds: int = 3, agent_counts=(5, 10, 20, 40), out_json: str | None = None) -> List[str]:
     x_tr, y_tr, x_te, y_te = load_data(num_train=12000)
     w0, _ = flatten_params(mlp_mnist.init_params(0))
-    M_bytes = w0.size * 4
+    M_bytes = w0.nbytes
     rows: List[str] = []
     results = {"model_bytes": int(M_bytes)}
 

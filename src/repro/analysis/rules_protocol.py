@@ -15,6 +15,10 @@ conventions that nothing type-checks:
     table below. An undeclared increment is a counter the equivalence tests
     can drift on; a stale declaration is a site someone deleted without
     updating the mirror.
+  * **Dtype-derived wire bytes** — byte accounting must come from the
+    payload's dtype/size (``core.wire.wire_size``, ``.nbytes``), never an
+    element count times a literal width: the quantized (int8) wire makes
+    ``n * 4`` wrong for every compressed transfer.
 
 When adding an accounting site, add it here together with its counterpart
 (`tests/test_analysis.py` asserts the table stays two-sided).
@@ -136,6 +140,103 @@ class FateKeyTuple(Rule):
                     f".{node.func.attr}() called with {arity} key argument(s);"
                     " the fate key is (channel, round, agent, part[, peer])"
                     " — a partial key aliases distinct messages onto one fate",
+                )
+
+
+def _contains_size_ref(node: ast.AST) -> bool:
+    """True if the subtree references an element count: a ``.size``
+    attribute or any identifier containing ``size`` (``sizes``,
+    ``_wsizes``, ...)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and "size" in sub.attr:
+            return True
+        if isinstance(sub, ast.Name) and "size" in sub.id:
+            return True
+    return False
+
+
+def _hardcoded_width_mults(expr: ast.AST) -> Iterator[ast.BinOp]:
+    """Mult nodes where one side is a bare int literal and the other side
+    references an element count — i.e. ``n_elements * 4``-style byte math
+    that bakes in an f32 wire width."""
+    for sub in ast.walk(expr):
+        if not (isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mult)):
+            continue
+        for const, other in ((sub.left, sub.right), (sub.right, sub.left)):
+            if (
+                isinstance(const, ast.Constant)
+                and isinstance(const.value, int)
+                and not isinstance(const.value, bool)
+                and _contains_size_ref(other)
+            ):
+                yield sub
+                break
+
+
+@register
+class WireBytesFromDtype(Rule):
+    """PR03: wire-byte accounting — ``nbytes=`` arguments of
+    ``publish()``/``send()`` and assignments to ``*bytes*`` counters — must
+    derive from the payload's dtype/size (``.nbytes``, ``.itemsize``,
+    ``core.wire.wire_size``), never from an element count times a hardcoded
+    integer width. A literal ``* 4`` silently assumes the f32 wire format
+    and misaccounts every quantized (int8) transfer."""
+
+    id = "PR03"
+    pack = "protocol"
+    title = "wire bytes hardcode an element width instead of the payload dtype"
+
+    _MSG = (
+        "byte accounting multiplies an element count by a hardcoded width "
+        "{w} — derive it from the payload (.nbytes/.itemsize or "
+        "core.wire.wire_size) so non-f32 wire modes stay accounted"
+    )
+
+    def _width(self, mult: ast.BinOp) -> int:
+        for side in (mult.left, mult.right):
+            if isinstance(side, ast.Constant) and isinstance(side.value, int):
+                return side.value
+        return 0  # unreachable: _hardcoded_width_mults guarantees a literal
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        sinks: list = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "nbytes":
+                        sinks.append(kw.value)
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in {"publish", "send"}
+                    and node.args
+                ):
+                    sinks.append(node.args[-1])
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for tgt in targets:
+                    base = tgt
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    name = (
+                        base.attr if isinstance(base, ast.Attribute)
+                        else base.id if isinstance(base, ast.Name)
+                        else ""
+                    )
+                    if "bytes" in name:
+                        sinks.append(node.value)
+                        break
+        seen = set()
+        for expr in sinks:
+            for mult in _hardcoded_width_mults(expr):
+                key = (mult.lineno, mult.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    mult.lineno,
+                    self._MSG.format(w=self._width(mult)),
                 )
 
 

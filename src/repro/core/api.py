@@ -29,6 +29,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.partition import PartitionSpec, PartitionTable
+from repro.core.wire import F32Wire, Int8Wire, make_wire  # noqa: F401 (re-export)
 from repro.p2p.ipfs_sim import SimIPFS
 
 UPDATE_TOPIC = "ipls/update"
@@ -83,15 +84,22 @@ class IPLSAgent:
         table: PartitionTable,
         spec: PartitionSpec,
         alpha: float = 0.5,
+        wire=None,
     ):
         self.id = agent_id
         self.net = substrate
         self.table = table
         self.spec = spec
         self.alpha = alpha
+        self.wire = wire if wire is not None else F32Wire()
         self.owned: Dict[int, PartitionState] = {}
         self.cache: Dict[int, np.ndarray] = {}
         self._requesters: Dict[int, List[int]] = {}
+        # error-feedback residual per partition this agent sends deltas FOR
+        # (int8 wire only; residuals update at encode time, i.e. regardless
+        # of whether the network later drops the message — deterministic and
+        # loss-independent, which the vectorized scan carry mirrors)
+        self._delta_err: Dict[int, np.ndarray] = {}
         self.live = True
 
     # -- Init --------------------------------------------------------------
@@ -143,9 +151,10 @@ class IPLSAgent:
                 src._unsubscribe_partition(k)
             self.owned[k] = PartitionState(value=val, eps=eps, version=ver)
             self._subscribe_partition(k)
-            # account for the partition transfer over the wire
+            # account for the partition transfer over the wire (one-time f32
+            # bootstrap: join transfers stay uncompressed in every wire mode)
             self.net.pubsub.publish(
-                MEMBER_TOPIC, self.id, ("join", self.id, k), 64 + self.spec.sizes[k] * 4
+                MEMBER_TOPIC, self.id, ("join", self.id, k), 64 + val.nbytes
             )
         _AGENTS[self.id] = self
 
@@ -166,12 +175,17 @@ class IPLSAgent:
                 continue
             # deterministic load-balancing over holders
             target = holders[(round_idx + self.id) % len(holders)]
+            err = self._delta_err.get(k)
+            if err is None:
+                err = np.zeros(sl.shape[0], np.float32)
+            payload, nb, new_err = self.wire.encode_delta(sl.astype(np.float32), err)
+            self._delta_err[k] = new_err
             self.net.pubsub.send(
                 UPDATE_TOPIC,
                 self.id,
                 target,
-                (k, sl.astype(np.float32)),
-                nbytes=sl.size * 4,
+                (k, payload),
+                nbytes=nb,
             )
 
     # -- holder side ---------------------------------------------------------
@@ -180,9 +194,9 @@ class IPLSAgent:
         if not self.live:
             return
         for msg in self.net.pubsub.drain(self.id, UPDATE_TOPIC):
-            k, sl = msg.payload
+            k, wp = msg.payload
             if k in self.owned:
-                self.owned[k].push_delta(sl)
+                self.owned[k].push_delta(self.wire.decode(wp))
                 self._requesters.setdefault(k, []).append(msg.sender)
 
     def serve_replies(self) -> None:
@@ -212,7 +226,15 @@ class IPLSAgent:
             r = deltas.shape[0]
             st.eps = self.alpha * st.eps + (1.0 - self.alpha) / r
             agg = deltas.sum(axis=0)
-            st.value = st.value - st.eps * agg
+            # Apply w - eps*agg with ONE f32 rounding: XLA's CPU backend
+            # contracts the multiply-subtract into an FMA, and the device
+            # engines must stay bit-comparable to this oracle. The f64
+            # product of two f32 values is exact, so the final cast is the
+            # single rounding an FMA performs.
+            eps32 = np.float64(np.float32(st.eps))
+            st.value = (
+                st.value.astype(np.float64) - eps32 * agg.astype(np.float64)
+            ).astype(np.float32)
             st.version += 1
 
     def _subscribe_partition(self, k: int) -> None:
@@ -232,8 +254,9 @@ class IPLSAgent:
         for k, st in self.owned.items():
             if self.table.replication(k) <= 1:
                 continue
+            payload, nb = self.wire.encode_value(st.value)
             self.net.pubsub.publish(
-                f"{REPLICA_TOPIC}/{k}", self.id, (k, st.value, st.version), st.value.size * 4
+                f"{REPLICA_TOPIC}/{k}", self.id, (k, payload, st.version), nb
             )
 
     def merge_replicas(self) -> None:
@@ -241,7 +264,8 @@ class IPLSAgent:
             return
         incoming: Dict[int, List[np.ndarray]] = {}
         for msg in self.net.pubsub.drain(self.id, REPLICA_TOPIC):
-            k, val, ver = msg.payload
+            k, wp, ver = msg.payload
+            val = self.wire.decode(wp)
             # a delayed replica value published in an earlier round carries an
             # older version; mean-merging it next to fresh values would drag
             # the partition backwards — discard anything staler than us
@@ -256,16 +280,15 @@ class IPLSAgent:
         st = self.owned.get(k)
         if st is None or not self.live:
             return
-        self.net.pubsub.send(
-            REPLY_TOPIC, self.id, requester, (k, st.value.copy()), st.value.size * 4
-        )
+        payload, nb = self.wire.encode_value(st.value)
+        self.net.pubsub.send(REPLY_TOPIC, self.id, requester, (k, payload), nb)
 
     def receive_replies(self) -> None:
         if not self.live:
             return
         for msg in self.net.pubsub.drain(self.id, REPLY_TOPIC):
-            k, val = msg.payload
-            self.cache[k] = val
+            k, wp = msg.payload
+            self.cache[k] = self.wire.decode(wp)
 
     # -- initial parameter collection (paper: 'each agent initially contacts
     # enough agents to collect the global parameters') -----------------------

@@ -42,7 +42,7 @@ def run_centralized(
                 "acc_std": 0.0,
                 "acc_max": float(acc),
                 # server traffic: every agent uploads + downloads the full model
-                "bytes_total": int((rnd + 1) * 2 * len(shards) * w.size * 4),
+                "bytes_total": int((rnd + 1) * 2 * len(shards) * w.nbytes),
             }
         )
     return history

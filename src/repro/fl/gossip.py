@@ -56,7 +56,8 @@ def run_gossip(
                 peers = rng.choice([p for p in range(n) if p != a], size=min(fanout, n - 1), replace=False)
                 seg = np.mean([models[p][lo:hi] for p in peers] + [models[a][lo:hi]], axis=0)
                 acc[lo:hi] = seg
-                total_bytes += int(spec.sizes[k] * 4 * len(peers))
+                # each peer ships its own segment copy; width from the payload
+                total_bytes += int(models[a][lo:hi].nbytes * len(peers))
             new_models.append(acc)
         models = new_models
         accs = np.array([trainers[0].evaluate(m, x_test, y_test) for m in models])

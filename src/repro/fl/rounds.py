@@ -27,6 +27,7 @@ from repro.core.api import (
     reset_registry,
 )
 from repro.core.partition import PartitionSpec, PartitionTable, flatten_params
+from repro.core.wire import make_wire
 from repro.fl.local_trainer import LocalTrainer
 from repro.models import mlp_mnist
 from repro.p2p.ipfs_sim import SimIPFS
@@ -150,6 +151,10 @@ class SimConfig:
     # data shard for agents added by a "join" churn action: a callable
     # agent_id -> (x, y). None = round-robin over the initial shards.
     join_shard: Optional[Callable[[int], Tuple[np.ndarray, np.ndarray]]] = None
+    # wire format for delta / value transfers: "f32" (raw) or "int8"
+    # (block-int8 + per-block scales + error feedback on the delta channel —
+    # ~4x fewer bytes_total; see core/wire.py and docs/ENGINE.md)
+    wire_dtype: str = "f32"
 
 
 def eval_subset(live: List[int], eval_agents: int) -> List[int]:
@@ -199,10 +204,11 @@ class IPLSSimulation:
         self.w0, self.layout = flatten_params(w0_params)
         self.spec = PartitionSpec.even(self.w0.size, cfg.num_partitions)
         self.table = PartitionTable(cfg.num_partitions, cfg.pi, cfg.rho)
+        self.wire = make_wire(cfg.wire_dtype)
         self.agents: Dict[int, IPLSAgent] = {}
         self.trainers: Dict[int, LocalTrainer] = {}
         for a in range(cfg.num_agents):
-            agent = IPLSAgent(a, self.net, self.table, self.spec, cfg.alpha)
+            agent = IPLSAgent(a, self.net, self.table, self.spec, cfg.alpha, wire=self.wire)
             agent.init(self.w0 if a == 0 else None)
             self.agents[a] = agent
             x, y = shards[a]
@@ -230,7 +236,9 @@ class IPLSSimulation:
                 if agent_id in self.agents:
                     self.agents[agent_id].crash()
             elif action == "join":
-                agent = IPLSAgent(agent_id, self.net, self.table, self.spec, self.cfg.alpha)
+                agent = IPLSAgent(
+                    agent_id, self.net, self.table, self.spec, self.cfg.alpha, wire=self.wire
+                )
                 agent.init()
                 self.agents[agent_id] = agent
                 # a joiner without a trainer never contributes a delta

@@ -71,7 +71,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition import unflatten_params
-from repro.kernels.ipls_aggregate.ops import aggregate_batched
+from repro.core.wire import BLOCK as WBLOCK
+from repro.core.wire import dequantize_rows, qdq_rows, quantize_rows, wire_size
+from repro.kernels.ipls_aggregate.ops import aggregate_batched, aggregate_batched_q
 from repro.models import mlp_mnist
 
 # cache-event value sources (see _run_round_lossy)
@@ -132,9 +134,20 @@ class VectorizedIPLSSimulation:
                 "engine='vectorized' does not support churn schedules; "
                 "use the scalar engine"
             )
+        # int8 wire mode: route through the general event-driven path even
+        # under PERFECT conditions — quantized replica consensus makes each
+        # holder's merged value differ (raw self + qdq of the others), which
+        # the phase-table PERFECT path cannot represent; under PERFECT the
+        # fate stream degenerates to (delivered, delay 0) so the event path
+        # reproduces the scalar engine exactly
+        self._int8 = getattr(cfg, "wire_dtype", "f32") == "int8"
         # imperfect connectivity runs batched through the mask-stream path
         # (same gate as the scalar engine's keyed-fates installation)
-        self._lossy = cfg.conditions.loss_prob > 0 or cfg.conditions.delay_prob > 0
+        self._lossy = (
+            cfg.conditions.loss_prob > 0
+            or cfg.conditions.delay_prob > 0
+            or self._int8
+        )
         self.cfg = cfg
         # multi-round fusion: run() executes windows of `scan_rounds` rounds
         # as one lax.scan device call each (0 = per-round calls)
@@ -184,10 +197,22 @@ class VectorizedIPLSSimulation:
             self._slot_inst[k, j] = i
 
         # padded instance size: tail zeros flow through the batched kernel
-        # untouched (0 - eps*0), so one shared width serves all partitions
+        # untouched (0 - eps*0), so one shared width serves all partitions.
+        # int8 wire: round up to whole quantization blocks so each (agent,
+        # partition) row of the (A, K, S) planes is an integral number of
+        # scale blocks; the zero tail quantizes to zero blocks, matching the
+        # scalar codec's per-slice padding exactly
         self.S = int(sizes.max())
+        if self._int8:
+            self.S = -(-self.S // WBLOCK) * WBLOCK
         self._sizes = sizes
         self._offsets = offsets
+        # per-partition wire payload bytes (4*s for f32; s + 4*ceil(s/BLOCK)
+        # for int8) — every closed-form byte count below derives from these
+        self._wsizes = np.asarray(
+            [wire_size(int(s), getattr(cfg, "wire_dtype", "f32")) for s in sizes],
+            np.int64,
+        )
 
         # ---- snapshot values / eps / caches from the scalar init ----------
         V_pre = np.zeros((self.K_inst, self.S), np.float32)
@@ -242,16 +267,16 @@ class VectorizedIPLSSimulation:
             ag = seed_sim.agents[a]
             for k in range(K):
                 if k not in ag.owned and k not in ag.cache:
-                    fetch_bytes += 16 + 4 * int(sizes[k])
+                    fetch_bytes += 16 + int(self._wsizes[k])
                     fetch_msgs += 2  # the fetch and its reply
         self._round0_fetch_bytes = fetch_bytes
         self._round0_fetch_msgs = fetch_msgs
 
         # steady-state per-round traffic: every agent updates every non-owned
-        # partition (4*s_k up + 4*s_k reply) and each replica of a
+        # partition (one wire payload up + one reply) and each replica of a
         # rho_k>1 partition publishes once for consensus
-        upd = int(np.sum((A - rho) * 4 * sizes))
-        replica = int(np.sum(np.where(rho > 1, rho * 4 * sizes, 0)))
+        upd = int(np.sum((A - rho) * self._wsizes))
+        replica = int(np.sum(np.where(rho > 1, rho * self._wsizes, 0)))
         self._round_bytes = 2 * upd + replica
         self._round_msgs = 2 * int(np.sum(A - rho)) + int(np.sum(np.where(rho > 1, rho, 0)))
 
@@ -371,15 +396,15 @@ class VectorizedIPLSSimulation:
             if use_kernel:
                 # TPU: lay the deltas out (K_inst, R, S) and aggregate every
                 # (partition, replica-slot) instance in ONE kernel launch.
-                # The kernel computes w - eps*masked_mean; the scalar engine
-                # applies w - eps*sum, so the kernel gets eps*r.
+                # The kernel computes w - eps*masked_sum, exactly the scalar
+                # engine's update (the 1/r lives in the eps recursion).
                 D = W - W2
                 lane = jnp.arange(S, dtype=jnp.int32)
                 valid = lane[None, :] < size_inst[:, None]      # (K_inst, S)
                 col = jnp.where(valid, off_inst[:, None] + lane[None, :], 0)
                 G = D[contrib_idx[:, :, None], col[:, None, :]]  # (K_inst,R,S)
                 G = G * valid[:, None, :]
-                V_pre = aggregate_batched(base, G, contrib_mask, eps_new * r)
+                V_pre = aggregate_batched(base, G, contrib_mask, eps_new)
             else:
                 # CPU/GPU: K small masked matmuls, identical math
                 V_pre = base
@@ -507,16 +532,23 @@ class VectorizedIPLSSimulation:
             -(-cond.max_delay_rounds // TICKS_PER_ROUND) if cond.delay_prob > 0 else 0
         )
         self._HD = self._Lu + 1  # history ring depth (value ages 0..Lu)
-        self._fates = seed_sim.fates
-        assert self._fates is not None, "lossy engine requires the keyed fate stream"
+        # int8 under PERFECT conditions also runs this path; the scalar
+        # engine never installed a fate stream there, so build one — every
+        # draw degenerates to (delivered, delay 0), i.e. default delivery
+        if seed_sim.fates is None:
+            from repro.fl.rounds import MessageFates
+
+            self._fates = MessageFates(cond, cfg.seed)
+        else:
+            self._fates = seed_sim.fates
 
         # per-round send counts/bytes are closed-form: loss only affects
         # delivery, never whether an UpdateModel/replica message is sent
         self._upd_msgs = int(np.sum(A - rho))
-        self._upd_bytes = int(np.sum((A - rho) * 4 * sizes))
+        self._upd_bytes = int(np.sum((A - rho) * self._wsizes))
         pub_inst = np.nonzero(rho[self._inst_k] > 1)[0]
         self._pub_msgs = int(len(pub_inst))
-        self._pub_bytes = int(np.sum(4 * sizes[self._inst_k[pub_inst]]))
+        self._pub_bytes = int(np.sum(self._wsizes[self._inst_k[pub_inst]]))
         # ordered (source -> destination) instance pairs for replica sync
         src, dst = [], []
         for k in range(K):
@@ -559,9 +591,35 @@ class VectorizedIPLSSimulation:
         self._has_cache = has
         self._C = jnp.asarray(C)
         self._Vl = jnp.asarray(V_pre)
-        self._eps_l = jnp.asarray(eps)
+        # eps lives on the HOST in float64: the scalar engine's per-partition
+        # eps is a python float, and its recursion must be replayed in the
+        # same precision (f32 replay drifts by an ULP, which the int8 codec
+        # amplifies to a full quantization step). Seed from the scalar
+        # agents' exact values, not the f32 snapshot.
+        self._eps64 = np.asarray(
+            [
+                seed_sim.agents[int(self._inst_owner[i])].owned[int(self._inst_k[i])].eps
+                for i in range(self.K_inst)
+            ],
+            np.float64,
+        )
         self._ver = np.zeros(self.K_inst, np.int64)
-        self._D_hist = jnp.zeros((self._Lu, A, self.N), jnp.float32)
+        # delta ring: in-flight delta windows, one entry per delay age.
+        # f32 (and the int8 CPU path) carry the (A, N) plane — for int8 the
+        # rows hold the DEQUANTIZED wire values with the owner's own slices
+        # kept raw; the int8 kernel path instead rings the int8 codes + the
+        # per-block scale planes and dequantizes inside the fused kernel.
+        if self._int8 and self._use_kernel:
+            nb = S // WBLOCK
+            self._ring = (
+                jnp.zeros((self._Lu, A, K, S), jnp.int8),
+                jnp.zeros((self._Lu, A, K, nb), jnp.float32),
+            )
+        else:
+            self._ring = jnp.zeros((self._Lu, A, self.N), jnp.float32)
+        # error-feedback residuals, one per (sender, partition) wire slice
+        # (zero and untouched at owner positions: own deltas never transit)
+        self._E = jnp.zeros((A, K, S) if self._int8 else (1,), jnp.float32)
         self._Vagg_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
         self._Vstart_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
 
@@ -579,8 +637,13 @@ class VectorizedIPLSSimulation:
         self._seq = 0
         self._t = 0
         # kernel-path contributor cap: owner + every other agent once per
-        # delta-age window
-        self.R_cap = 1 + (A - 1) * (self._Lu + 1)
+        # delta-age window. The quantized kernel takes the owner's raw delta
+        # through a dedicated input, so its contributor table holds only the
+        # remote (wire) rows.
+        if self._int8 and self._use_kernel:
+            self.R_cap = max(1, (A - 1) * (self._Lu + 1))
+        else:
+            self.R_cap = 1 + (A - 1) * (self._Lu + 1)
         self._build_jitted_lossy()
 
     def _build_jitted_lossy(self):
@@ -593,6 +656,19 @@ class VectorizedIPLSSimulation:
         layout_t = tuple((name, tuple(shape)) for name, shape in layout)
         LA = (Lu + 1) * A
         use_kernel = self._use_kernel
+        int8 = self._int8
+        # (A, K, S) delta-plane gather maps: row (a, k) is agent a's slice of
+        # partition k, zero beyond s_k (whole zero blocks quantize to zero)
+        lane_s = np.arange(S)
+        valid_ks = lane_s[None, :] < sizes[:, None]
+        col_ks = jnp.asarray(
+            np.where(valid_ks, offsets[:, None] + lane_s[None, :], 0), jnp.int32
+        )
+        valid_ksf = jnp.asarray(valid_ks, jnp.float32)
+        owner3 = jnp.asarray(self._owner_col)[:, :, None]
+        inst_k_j = jnp.asarray(self._inst_k)
+        inst_owner_j = jnp.asarray(self._inst_owner)
+        WNB = S // WBLOCK if int8 else 0
         widx = jnp.asarray(self._widx)
         widx_eval = jnp.asarray(self._widx[self._eval_idx])
         inst_of_k = [np.nonzero(self._inst_k == k)[0] for k in range(K)]
@@ -611,8 +687,13 @@ class VectorizedIPLSSimulation:
         def pre(V, C, Vstart_hist, Vagg_hist, c0_mask, c0_src):
             """Phase 0: roll the start-of-round value ring, apply the cache
             updates the scalar engine would drain before LoadModel, and
-            assemble all agents' flat weights."""
-            Vstart_new = jnp.concatenate([V[None], Vstart_hist[:-1]], axis=0)
+            assemble all agents' flat weights. The value rings store WIRE
+            values — every consumer (fetch/UpdateModel-reply cache writes,
+            replica merges) saw the payload after one trip over the wire, so
+            under int8 the authoritative V stays raw while the ring entry is
+            its quantize->dequantize image."""
+            V0 = qdq_rows(V) if int8 else V
+            Vstart_new = jnp.concatenate([V0[None], Vstart_hist[:-1]], axis=0)
             T0 = jnp.concatenate(
                 [Vstart_new.reshape(HD * K_inst, S), Vagg_hist.reshape(HD * K_inst, S)],
                 axis=0,
@@ -621,41 +702,102 @@ class VectorizedIPLSSimulation:
             W = build_W(V, C0, widx)
             return Vstart_new, C0, W
 
-        def core_main(V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
-                      M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+        def core_main(V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
+                      M_all, eps_new, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
             """Phases 2-3: aggregate every (partition, replica-slot) instance
-            from the current + in-flight delta windows, run the eps
-            recursion, version-filtered replica consensus, reply-driven
-            cache updates, and roll the history rings."""
-            D_all = jnp.concatenate([D_now[None], D_hist], axis=0).reshape(LA, N)
-            eps_new = jnp.where(
-                r_vec > 0, alpha * eps + (1.0 - alpha) / jnp.maximum(r_vec, 1.0), eps
-            )
-            if use_kernel:
-                # TPU: gather the contributor rows (current + ring-buffer
-                # ages) into the (K_inst, R, S) layout of the batched kernel;
-                # the kernel computes w - eps*masked_mean, so it gets eps*r
-                lane = jnp.arange(S, dtype=jnp.int32)
-                valid = lane[None, :] < size_inst[:, None]
-                col = jnp.where(valid, off_inst[:, None] + lane[None, :], 0)
-                G = D_all[kidx[:, :, None], col[:, None, :]]
-                G = G * valid[:, None, :]
-                V_agg = aggregate_batched(V, G, kmask, eps_new * r_vec)
+            from the current + in-flight delta windows, run the
+            version-filtered replica consensus, reply-driven cache updates,
+            and roll the history rings. `eps_new` is the post-recursion
+            staleness weight, computed on the HOST in float64 by the control
+            plane (`_control_round`) — the scalar engine's eps is a python
+            float, and replaying its recursion in device f32 drifts by an
+            ULP, which quantization then amplifies to a full scale step.
+
+            int8 wire: every non-owner (a, k) delta slice is quantized (with
+            the per-slice error-feedback residual E, updated at send time —
+            loss-independent, exactly like the scalar encode) before joining
+            the delta ring; owner slices never transit and stay raw. On the
+            kernel path the ring carries the int8 codes + scale planes and
+            dequantize fuses into the aggregation kernel's masked-sum; on
+            the CPU path the ring carries the dequantized (A, N) plane with
+            raw owner slices mixed in."""
+            if int8:
+                Dplane = D_now[:, col_ks] * valid_ksf[None]  # (A, K, S)
+                qn, scn, ne = quantize_rows(Dplane, E)
+                E_new = jnp.where(owner3, E, ne)
             else:
-                # CPU/GPU: K masked matmuls over the stacked delta windows
-                V_agg = V
-                for k in range(K):
-                    rows = inst_of_k[k]
-                    Mk = M_all[inst_row0[k] : inst_row0[k] + len(rows)]
-                    Dk = jax.lax.dynamic_slice(
-                        D_all, (0, int(offsets[k])), (LA, int(sizes[k]))
+                E_new = E
+            if int8 and use_kernel:
+                # fused path: gather contributor CODES + SCALES per instance
+                # (owner excluded from kidx by the control plane; its raw
+                # delta enters through the kernel's dedicated own-input)
+                Q_hist, S_hist = ring
+                Q_all = jnp.concatenate([qn[None], Q_hist], axis=0).reshape(LA, K, S)
+                S_all = jnp.concatenate([scn[None], S_hist], axis=0).reshape(LA, K, WNB)
+                G_q = Q_all[kidx, inst_k_j[:, None]]     # (K_inst, R, S)
+                G_s = S_all[kidx, inst_k_j[:, None]]     # (K_inst, R, WNB)
+                d_own = Dplane[inst_owner_j, inst_k_j]   # (K_inst, S)
+                V_agg = aggregate_batched_q(
+                    V, d_own, G_q, G_s, kmask,
+                    jnp.ones((K_inst,), jnp.float32), eps_new,
+                )
+                ring_new = (
+                    jnp.concatenate([qn[None], Q_hist], axis=0)[:Lu],
+                    jnp.concatenate([scn[None], S_hist], axis=0)[:Lu],
+                )
+            else:
+                if int8:
+                    # wire image of this round's delta plane: dequantized
+                    # slices for remote readers, raw slices at owner positions
+                    deq = dequantize_rows(qn, scn)
+                    D_use = jnp.concatenate(
+                        [
+                            jnp.where(
+                                owner3[:, k],
+                                jax.lax.dynamic_slice(
+                                    D_now, (0, int(offsets[k])), (A, int(sizes[k]))
+                                ),
+                                deq[:, k, : sizes[k]],
+                            )
+                            for k in range(K)
+                        ],
+                        axis=1,
                     )
-                    agg_k = Mk @ Dk
-                    upd = V[rows, : sizes[k]] - eps_new[rows, None] * agg_k
-                    V_agg = V_agg.at[rows, : sizes[k]].set(upd)
+                else:
+                    D_use = D_now
+                D_all = jnp.concatenate([D_use[None], ring], axis=0).reshape(LA, N)
+                if use_kernel:
+                    # TPU: gather the contributor rows (current + ring-buffer
+                    # ages) into the (K_inst, R, S) layout of the batched
+                    # kernel, in scalar DELIVERY order (kidx), so the kernel's
+                    # sequential masked-sum associates exactly like the
+                    # scalar oracle's np.sum over pending deltas
+                    lane = jnp.arange(S, dtype=jnp.int32)
+                    valid = lane[None, :] < size_inst[:, None]
+                    col = jnp.where(valid, off_inst[:, None] + lane[None, :], 0)
+                    G = D_all[kidx[:, :, None], col[:, None, :]]
+                    G = G * valid[:, None, :]
+                    V_agg = aggregate_batched(V, G, kmask, eps_new)
+                else:
+                    # CPU/GPU: K masked matmuls over the stacked delta windows
+                    V_agg = V
+                    for k in range(K):
+                        rows = inst_of_k[k]
+                        Mk = M_all[inst_row0[k] : inst_row0[k] + len(rows)]
+                        Dk = jax.lax.dynamic_slice(
+                            D_all, (0, int(offsets[k])), (LA, int(sizes[k]))
+                        )
+                        agg_k = Mk @ Dk
+                        upd = V[rows, : sizes[k]] - eps_new[rows, None] * agg_k
+                        V_agg = V_agg.at[rows, : sizes[k]].set(upd)
+                ring_new = jnp.concatenate([D_use[None], ring], axis=0)[:Lu]
+            # everything a post-aggregate value feeds (UpdateModel-reply
+            # cache writes, replica publishes) crossed the wire: ring/table
+            # the wire image, keep the authoritative V_agg raw
+            V_aggw = qdq_rows(V_agg) if int8 else V_agg
             # replica consensus: mean of self + version-kept arrived values
             # (late values read the post-aggregate ring at their send age)
-            Vm_src = jnp.concatenate([V_agg[None], Vagg_hist[: HD - 1]], axis=0)
+            Vm_src = jnp.concatenate([V_aggw[None], Vagg_hist[: HD - 1]], axis=0)
             contrib = jnp.einsum("lij,ljs->is", Gm, Vm_src)
             V_new = (V_agg + contrib) / (1.0 + merge_cnt)[:, None]
             # phase-2 cache updates (may reference this round's post-agg table)
@@ -663,15 +805,13 @@ class VectorizedIPLSSimulation:
                 [
                     Vstart_new.reshape(HD * K_inst, S),
                     Vagg_hist.reshape(HD * K_inst, S),
-                    V_agg,
+                    V_aggw,
                 ],
                 axis=0,
             )
             C2 = jnp.where(c2_mask[:, :, None], T2[c2_src], C0)
-            # roll the rings
-            D_hist_new = jnp.concatenate([D_now[None], D_hist], axis=0)[:Lu]
-            Vagg_hist_new = jnp.concatenate([V_agg[None], Vagg_hist[:-1]], axis=0)
-            return V_new, eps_new, C2, D_hist_new, Vagg_hist_new
+            Vagg_hist_new = jnp.concatenate([V_aggw[None], Vagg_hist[:-1]], axis=0)
+            return V_new, C2, ring_new, Vagg_hist_new, E_new
 
         def eval_lossy(V_new, C2):
             # evaluate the sub-sampled agents on end-of-round state
@@ -683,14 +823,14 @@ class VectorizedIPLSSimulation:
                 lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
             )(W_eval)
 
-        def core(V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
-                 M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
-            V_new, eps_new, C2, D_hist_new, Vagg_hist_new = core_main(
-                V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
-                M_all, r_vec, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask,
+        def core(V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
+                 M_all, eps, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+            V_new, C2, ring_new, Vagg_hist_new, E_new = core_main(
+                V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
+                M_all, eps, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask,
             )
             accs = eval_lossy(V_new, C2)
-            return V_new, eps_new, C2, D_hist_new, Vagg_hist_new, accs
+            return V_new, C2, ring_new, Vagg_hist_new, E_new, accs
 
         buckets = self._buckets
         E = len(self._eval_idx)
@@ -713,15 +853,15 @@ class VectorizedIPLSSimulation:
             plane's per-round dense tensors ride as scan xs."""
 
             def body(carry, xs):
-                V, eps, C, D_hist, Vagg_hist, Vstart_hist = carry
-                (Xr, Yr, c0_mask, c0_src, M_all, r_vec, Gm, cnt,
+                V, C, ring, Vagg_hist, Vstart_hist, Eres = carry
+                (Xr, Yr, c0_mask, c0_src, M_all, eps, Gm, cnt,
                  c2_mask, c2_src, kidx, kmask, de) = xs
                 Vstart_new, C0, W = pre(V, C, Vstart_hist, Vagg_hist, c0_mask, c0_src)
                 W2 = sgd_all(W, Xr, Yr)
                 D_now = W - W2
-                V_new, eps_new, C2, D_hist_new, Vagg_hist_new = core_main(
-                    V, eps, C0, D_now, D_hist, Vagg_hist, Vstart_new,
-                    M_all, r_vec, Gm, cnt, c2_mask, c2_src, kidx, kmask,
+                V_new, C2, ring_new, Vagg_hist_new, E_new = core_main(
+                    V, C0, D_now, ring, Vagg_hist, Vstart_new, Eres,
+                    M_all, eps, Gm, cnt, c2_mask, c2_src, kidx, kmask,
                 )
                 if gate_eval:
                     accs = jax.lax.cond(
@@ -731,17 +871,19 @@ class VectorizedIPLSSimulation:
                     )
                 else:
                     accs = eval_lossy(V_new, C2)
-                return (V_new, eps_new, C2, D_hist_new, Vagg_hist_new, Vstart_new), accs
+                return (
+                    V_new, C2, ring_new, Vagg_hist_new, Vstart_new, E_new
+                ), accs
 
-            def scan_window(V, eps, C, D_hist, Vagg_hist, Vstart_hist, xs_all):
+            def scan_window(V, C, ring, Vagg_hist, Vstart_hist, Eres, xs_all):
                 return jax.lax.scan(
-                    body, (V, eps, C, D_hist, Vagg_hist, Vstart_hist), xs_all
+                    body, (V, C, ring, Vagg_hist, Vstart_hist, Eres), xs_all
                 )
 
             return jax.jit(scan_window, donate_argnums=(0, 1, 2, 3, 4, 5))
 
         self._lossy_pre_j = jax.jit(pre, donate_argnums=(1,))
-        self._lossy_core_j = jax.jit(core, donate_argnums=(0, 1, 2, 4, 5))
+        self._lossy_core_j = jax.jit(core, donate_argnums=(0, 1, 3, 4, 6))
         self._scan_window_j = make_scan(self._eval_cadence > 1)
         self._batched_deltas_keep = jax.jit(
             lambda W, X, Y: jax.vmap(
@@ -819,7 +961,7 @@ class VectorizedIPLSSimulation:
         for send_r, a, k, inst in serves:
             de1, d1 = f.draw_one(CH_FETCH_REPLY, t, a, k, int(self._inst_owner[inst]))
             msgs += 1
-            nbytes += 4 * int(sizes[k])
+            nbytes += int(self._wsizes[k])
             if de1:
                 self._push_cache_event(
                     TICKS * t + 1 + d1, TICKS * t + 1, a, k, _KIND_START, t, inst
@@ -834,10 +976,16 @@ class VectorizedIPLSSimulation:
         nbytes += self._upd_bytes
         drops += int((nonown & ~de_u).sum())
         lat_u = lat_rounds(dl_u)
-        for a, k in np.argwhere(nonown & de_u):
-            self._arr_ring[(t + int(lat_u[a, k])) % self._qdepth].append(
-                (t, int(a), int(k), int(tgt_inst[a, k]))
-            )
+        # ring appends must mirror the scalar inbox, which fills in delivery-
+        # TICK order: a message delayed d ticks lands at tick TICKS*t+2+d, so
+        # same-send-round arrivals drain delay-ascending first, then publish
+        # (a, k) order. np.unique gives the delays sorted ascending.
+        live_u = nonown & de_u
+        for d in np.unique(dl_u[live_u]):
+            for a, k in np.argwhere(live_u & (dl_u == d)):
+                self._arr_ring[(t + int(lat_u[a, k])) % self._qdepth].append(
+                    (t, int(a), int(k), int(tgt_inst[a, k]))
+                )
 
         # ---- arrivals => contribution masks + UpdateModel replies ---------
         arrivals, self._arr_ring[t % self._qdepth] = (
@@ -845,16 +993,32 @@ class VectorizedIPLSSimulation:
         )
         M_all = np.zeros((K_inst, (Lu + 1) * A), np.float32)
         M_all[np.arange(K_inst), self._inst_owner] = 1.0  # owner self-delta
+        # per-instance contributor columns in scalar DELIVERY order: the
+        # arrivals list drains the ring in append order = (send round
+        # ascending, then tick-delay ascending, then (a, k) send order),
+        # exactly the scalar pubsub's FIFO inbox — the order the
+        # sequential-sum kernel must reduce in
+        contrib_cols: List[List[int]] = [[] for _ in range(K_inst)]
         for send_r, a, k, inst in arrivals:
             M_all[inst, (t - send_r) * A + a] = 1.0
+            contrib_cols[inst].append((t - send_r) * A + a)
         r_vec = M_all.sum(axis=1)
+        # eps recursion in float64 on the host — bit-identical to the scalar
+        # engine's python-float `eps = alpha*eps + (1-alpha)/r`; the device
+        # consumes only the f32 image of the post-recursion value
+        r64 = np.maximum(r_vec, 1.0).astype(np.float64)  # weak f32 promotion would downgrade the divide
+        self._eps64 = np.where(
+            r_vec > 0,
+            self.cfg.alpha * self._eps64 + (1.0 - self.cfg.alpha) / r64,
+            self._eps64,
+        )
         if arrivals:
             arr = np.asarray([(a, k, i) for (_, a, k, i) in arrivals], np.int64)
             de_r, d_r = f.draw(
                 CH_UPDATE_REPLY, t, arr[:, 0], arr[:, 1], self._inst_owner[arr[:, 2]]
             )
             msgs += len(arrivals)
-            nbytes += int(np.sum(4 * sizes[arr[:, 1]]))
+            nbytes += int(np.sum(self._wsizes[arr[:, 1]]))
             drops += int((~de_r).sum())
             for j in np.nonzero(de_r)[0]:
                 self._push_cache_event(
@@ -921,11 +1085,18 @@ class VectorizedIPLSSimulation:
             self._has_cache[a, k] = True  # suppresses fetches from round t+1
 
         # ---- kernel-path contributor gathers ------------------------------
+        # slot order IS reduction order for the sequential-sum kernel, so it
+        # must be the scalar pending order: own delta first (the local push
+        # precedes the inbox drain), then arrivals in delivery order. The
+        # quantized kernel takes the owner's raw delta through a dedicated
+        # input summed first, so its table holds only the remote rows.
         if self._use_kernel:
             kidx = np.zeros((K_inst, self.R_cap), np.int32)
             kmask = np.zeros((K_inst, self.R_cap), np.float32)
             for i in range(K_inst):
-                rows = np.nonzero(M_all[i])[0]
+                rows = contrib_cols[i]
+                if not self._int8:
+                    rows = [int(self._inst_owner[i])] + rows
                 kidx[i, : len(rows)] = rows
                 kmask[i, : len(rows)] = 1.0
         else:
@@ -935,7 +1106,7 @@ class VectorizedIPLSSimulation:
         self._t = t + 1
         return dict(
             rnd=rnd, c0_mask=c0_mask, c0_src=c0_src, c2_mask=c2_mask,
-            c2_src=c2_src, M_all=M_all, r_vec=np.asarray(r_vec, np.float32),
+            c2_src=c2_src, M_all=M_all, eps=self._eps64.astype(np.float32),
             Gm=Gm, cnt=cnt, kidx=kidx, kmask=kmask,
             msgs=msgs, drops=drops, nbytes=nbytes,
         )
@@ -964,10 +1135,12 @@ class VectorizedIPLSSimulation:
             ]
             D_now = jnp.concatenate(parts, axis=0)
         (
-            self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist, accs
+            self._Vl, self._C, self._ring, self._Vagg_hist,
+            self._E, accs,
         ) = self._lossy_core_j(
-            self._Vl, self._eps_l, C0, D_now, self._D_hist, self._Vagg_hist,
-            Vstart_new, jnp.asarray(ctl["M_all"]), jnp.asarray(ctl["r_vec"]),
+            self._Vl, C0, D_now, self._ring, self._Vagg_hist,
+            Vstart_new, self._E, jnp.asarray(ctl["M_all"]),
+            jnp.asarray(ctl["eps"]),
             jnp.asarray(ctl["Gm"]), jnp.asarray(ctl["cnt"]),
             jnp.asarray(ctl["c2_mask"]), jnp.asarray(ctl["c2_src"]),
             jnp.asarray(ctl["kidx"]), jnp.asarray(ctl["kmask"]),
@@ -1011,16 +1184,16 @@ class VectorizedIPLSSimulation:
         des = jnp.asarray([self._do_eval(r0 + w) for w in range(W)])
         xs_all = (
             Xs, Ys, stack("c0_mask"), stack("c0_src"), stack("M_all"),
-            stack("r_vec"), stack("Gm"), stack("cnt"), stack("c2_mask"),
+            stack("eps"), stack("Gm"), stack("cnt"), stack("c2_mask"),
             stack("c2_src"), stack("kidx"), stack("kmask"), des,
         )
         carry, accs = self._scan_window_j(
-            self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist,
-            self._Vstart_hist, xs_all,
+            self._Vl, self._C, self._ring, self._Vagg_hist,
+            self._Vstart_hist, self._E, xs_all,
         )
         (
-            self._Vl, self._eps_l, self._C, self._D_hist, self._Vagg_hist,
-            self._Vstart_hist,
+            self._Vl, self._C, self._ring, self._Vagg_hist,
+            self._Vstart_hist, self._E,
         ) = carry
         self.device_dispatches += 1
         accs = np.asarray(accs, np.float32)

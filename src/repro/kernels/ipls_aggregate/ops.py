@@ -5,17 +5,20 @@ from __future__ import annotations
 from repro.kernels.ipls_aggregate.ipls_aggregate import (
     ipls_aggregate,
     ipls_aggregate_batched,
+    ipls_aggregate_batched_q,
 )
 from repro.kernels.ipls_aggregate.ref import (
+    ipls_aggregate_batched_q_ref,
     ipls_aggregate_batched_ref,
     ipls_aggregate_ref,
 )
 
 
 def aggregate(w, deltas, mask, eps, use_kernel: bool = True, interpret: bool | None = None):
-    """Fused w <- w - eps*masked_mean(deltas). interpret=None auto-detects
-    the backend: the TPU kernel body runs natively on TPU and through the
-    Pallas interpreter everywhere else."""
+    """Fused w <- w - eps*masked_sum(deltas) (the 1/r lives in the eps
+    recursion). interpret=None auto-detects the backend: the TPU kernel body
+    runs natively on TPU and through the Pallas interpreter everywhere
+    else."""
     if use_kernel:
         return ipls_aggregate(w, deltas, mask, eps, interpret=interpret)
     return ipls_aggregate_ref(w, deltas, mask, eps)
@@ -27,3 +30,17 @@ def aggregate_batched(w, deltas, mask, eps, use_kernel: bool = True, interpret: 
     if use_kernel:
         return ipls_aggregate_batched(w, deltas, mask, eps, interpret=interpret)
     return ipls_aggregate_batched_ref(w, deltas, mask, eps)
+
+
+def aggregate_batched_q(
+    w, own, q, scales, mask, own_mask, eps,
+    use_kernel: bool = True, interpret: bool | None = None,
+):
+    """Quantized-wire variant: remote deltas arrive as int8 codes + per-block
+    power-of-two scales and dequantize inside the masked-sum reduction; the
+    holder's own delta (never on the wire) stays raw f32 and sums first."""
+    if use_kernel:
+        return ipls_aggregate_batched_q(
+            w, own, q, scales, mask, own_mask, eps, interpret=interpret
+        )
+    return ipls_aggregate_batched_q_ref(w, own, q, scales, mask, own_mask, eps)

@@ -5,13 +5,15 @@ from repro.kernels.quantize.quantize import dequantize, quantize
 from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
 
 
-def compress(x, err, use_kernel: bool = True, interpret: bool = True):
+def compress(x, err, use_kernel: bool = True, interpret: bool | None = None):
+    """interpret=None auto-detects the backend (native on TPU, Pallas
+    interpreter elsewhere), same policy as ``kernels/ipls_aggregate``."""
     if use_kernel:
         return quantize(x, err, interpret=interpret)
     return quantize_ref(x, err)
 
 
-def decompress(q, scales, use_kernel: bool = True, interpret: bool = True):
+def decompress(q, scales, use_kernel: bool = True, interpret: bool | None = None):
     if use_kernel:
         return dequantize(q, scales, interpret=interpret)
     return dequantize_ref(q, scales)

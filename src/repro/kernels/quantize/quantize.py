@@ -2,7 +2,19 @@
 
 Fuses (add error) -> (blockwise absmax) -> (scale/round/clip) -> (residual)
 into one VMEM pass; the XLA path round-trips x through HBM four times.
-Tile: 8 blocks of 1024 = (8, 1024) per grid step (32 KiB f32)."""
+Tile: 8 blocks of 1024 = (8, 1024) per grid step (32 KiB f32).
+
+Scales are exact powers of two, picked by exponent arithmetic on the absmax
+bit pattern (see ``core/wire.py`` for the rationale): every codec op is then
+exact in f32, so kernel, jnp reference, and numpy wire codec agree bit for
+bit in every compilation context. Blocks with absmax below 2**-120
+(including all-zero blocks) carry scale 0 and all-zero codes.
+
+Wire contract (shared with ``ref.py`` and ``core/wire.py``): a vector of N
+values quantizes into N int8 codes plus ``ceil(N / BLOCK)`` f32 per-block
+scales; both entry points pad to their tile internally and trim the outputs
+back, so any N is accepted.
+"""
 from __future__ import annotations
 
 import functools
@@ -11,24 +23,47 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ipls_aggregate.ipls_aggregate import default_interpret
+
 BLOCK = 1024
 TILE = 8  # blocks per grid step
+_EMIN = 6  # biased exponents <= this quantize to the zero block
+
+
+def num_blocks(n: int) -> int:
+    """Per-block scale count for an n-element payload: ceil(n / BLOCK)."""
+    return -(-n // BLOCK)
+
+
+def _pow2_scales(absmax):
+    """(scale, inv_scale), both exact powers of two: scale = 2**(E-6) puts
+    absmax/scale in [64, 128)."""
+    bits = jax.lax.bitcast_convert_type(absmax, jnp.int32)
+    e0 = bits >> 23
+    zero = e0 <= _EMIN
+    e0c = jnp.maximum(e0, _EMIN + 1)
+    scale = jax.lax.bitcast_convert_type((e0c - _EMIN) << 23, jnp.float32)
+    inv = jax.lax.bitcast_convert_type(((127 + 133) - e0c) << 23, jnp.float32)
+    return jnp.where(zero, 0.0, scale), jnp.where(zero, 0.0, inv)
 
 
 def _kernel(x_ref, e_ref, q_ref, s_ref, ne_ref):
     x = x_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)  # (TILE, BLOCK)
-    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
-    safe = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(x / safe), -127, 127)
-    deq = q * safe
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale, inv = _pow2_scales(absmax)
+    q = jnp.clip(jnp.round(x * inv), -127, 127)
+    deq = q * scale
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale
     ne_ref[...] = (x - deq).astype(ne_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def quantize(x, err, interpret: bool = True):
-    """x, err: (N,), N % (TILE*BLOCK) == 0 after padding (handled here)."""
+def quantize(x, err, interpret: bool | None = None):
+    """x, err: (N,), any N. Returns (q (N,) int8, scales (ceil(N/BLOCK),),
+    new_err (N,)); padding to TILE*BLOCK is internal and trimmed back."""
+    if interpret is None:
+        interpret = default_interpret()
     N = x.shape[0]
     pad = (-N) % (TILE * BLOCK)
     xp = jnp.pad(x, (0, pad))
@@ -59,20 +94,30 @@ def quantize(x, err, interpret: bool = True):
         ],
         interpret=interpret,
     )(x2, e2)
-    return q.reshape(-1)[:N], s[:, 0], ne.reshape(-1)[:N]
+    return q.reshape(-1)[:N], s[: num_blocks(N), 0], ne.reshape(-1)[:N]
 
 
 def _dq_kernel(q_ref, s_ref, o_ref):
-    o_ref[...] = (q_ref[...].astype(jnp.float32) * jnp.maximum(s_ref[...], 1e-12)).astype(
-        o_ref.dtype
-    )
+    # scales are exact powers of two (or 0 for zero blocks): a plain multiply
+    # reconstructs the dequantized value exactly
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dequantize(q, scales, interpret: bool = True):
+def dequantize(q, scales, interpret: bool | None = None):
+    """q: (N,) int8, scales: (ceil(N/BLOCK),). Any N: the payload is padded
+    to a whole TILE of blocks (pad blocks carry zero codes and zero scales,
+    which dequantize to exact zeros) and the output trimmed back to N —
+    mirroring ``quantize``'s pad/trim path, so a quantize->dequantize round
+    trip works at every shape edge (N % BLOCK != 0, nb % TILE != 0)."""
+    if interpret is None:
+        interpret = default_interpret()
     N = q.shape[0]
-    nb = N // BLOCK
-    grid = (max(nb // TILE, 1),)
+    pad = (-N) % (TILE * BLOCK)
+    nb = (N + pad) // BLOCK
+    qp = jnp.pad(q, (0, pad)).reshape(nb, BLOCK)
+    sp = jnp.pad(scales, (0, nb - scales.shape[0])).reshape(nb, 1)
+    grid = (nb // TILE,)
     out = pl.pallas_call(
         _dq_kernel,
         grid=grid,
@@ -84,5 +129,5 @@ def dequantize(q, scales, interpret: bool = True):
         out_specs=pl.BlockSpec((TILE, BLOCK), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
         interpret=interpret,
-    )(q.reshape(nb, BLOCK), scales.reshape(nb, 1))
-    return out.reshape(-1)
+    )(qp, sp)
+    return out.reshape(-1)[:N]

@@ -4,6 +4,14 @@ The compressed-UpdateModel path: IPLS agents on WAN links (paper setting)
 and compressed reduce-scatter at pod scale both send int8 deltas; the error
 feedback accumulator keeps the quantization noise from biasing convergence
 (Karimireddy et al., arXiv:1901.09847).
+
+Scales are exact powers of two (see ``core/wire.py``): every codec op is
+exact in f32, so this reference, the Pallas kernel, and the numpy wire codec
+produce identical bits from identical inputs.
+
+Wire contract (shared with ``quantize.py`` and ``core/wire.py``): N values
+become N int8 codes plus ``ceil(N / BLOCK)`` f32 per-block scales. Inputs of
+any N are zero-padded to whole blocks internally and trimmed back.
 """
 from __future__ import annotations
 
@@ -13,21 +21,36 @@ import jax
 import jax.numpy as jnp
 
 BLOCK = 1024
+_EMIN = 6
+
+
+def _pow2_scales(absmax):
+    bits = jax.lax.bitcast_convert_type(absmax, jnp.int32)
+    e0 = bits >> 23
+    zero = e0 <= _EMIN
+    e0c = jnp.maximum(e0, _EMIN + 1)
+    scale = jax.lax.bitcast_convert_type((e0c - _EMIN) << 23, jnp.float32)
+    inv = jax.lax.bitcast_convert_type(((127 + 133) - e0c) << 23, jnp.float32)
+    return jnp.where(zero, 0.0, scale), jnp.where(zero, 0.0, inv)
 
 
 def quantize_ref(x: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """x, err: (N,) with N % BLOCK == 0. Returns (q int8, scales, new_err)."""
+    """x, err: (N,), any N. Returns (q (N,) int8, scales (ceil(N/BLOCK),),
+    new_err (N,))."""
     n = x.shape[0]
-    xb = (x + err).reshape(n // BLOCK, BLOCK).astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
-    safe = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(xb / safe), -127, 127).astype(jnp.int8)
-    deq = q.astype(jnp.float32) * safe
+    pad = (-n) % BLOCK
+    xb = (jnp.pad(x, (0, pad)) + jnp.pad(err, (0, pad)))
+    xb = xb.reshape(-1, BLOCK).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale, inv = _pow2_scales(absmax)
+    q = jnp.clip(jnp.round(xb * inv), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
     new_err = (xb - deq).reshape(-1)
-    return q.reshape(-1), scale[:, 0], new_err
+    return q.reshape(-1)[:n], scale[:, 0], new_err[:n]
 
 
 def dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
     n = q.shape[0]
-    qb = q.reshape(n // BLOCK, BLOCK).astype(jnp.float32)
-    return (qb * jnp.maximum(scales[:, None], 1e-12)).reshape(-1)
+    pad = (-n) % BLOCK
+    qb = jnp.pad(q, (0, pad)).reshape(-1, BLOCK).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(-1)[:n]

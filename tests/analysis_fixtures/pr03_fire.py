@@ -1,0 +1,11 @@
+"""PR03 fire: wire bytes computed as element-count times a hardcoded f32
+width instead of the payload's own dtype/size."""
+
+
+def sync_segment(net, topic, seg, sizes, k, peers):
+    # element count * literal width at a publish sink
+    net.publish(topic, 0, seg, nbytes=seg.size * 4)
+    # and the same pattern feeding a byte counter
+    total_bytes = 0
+    total_bytes += int(sizes[k] * 4 * len(peers))
+    return total_bytes

