@@ -12,12 +12,18 @@ from typing import List
 from benchmarks.common import csv_row, load_data, save_json
 from repro.data import iid_split
 from repro.fl import IPLSSimulation, SimConfig, make_simulation, run_centralized
+from repro.telemetry import host_metadata
 
 
-def run(rounds: int = 40, agent_counts=(10, 25, 50), out_json: str | None = None) -> List[str]:
+def run(
+    rounds: int = 40,
+    agent_counts=(10, 25, 50),
+    out_json: str | None = None,
+    timestamp: str | None = None,
+) -> List[str]:
     x_tr, y_tr, x_te, y_te = load_data()
     rows: List[str] = []
-    results = {}
+    results = {"host": host_metadata(timestamp)}
     for n in agent_counts:
         shards = iid_split(x_tr, y_tr, n, seed=0)
         t0 = time.time()
@@ -28,10 +34,16 @@ def run(rounds: int = 40, agent_counts=(10, 25, 50), out_json: str | None = None
         hist = IPLSSimulation(cfg, shards, x_te, y_te).run()
         t_ipls = time.time() - t0
         hist_c = run_centralized(shards, x_te, y_te, rounds=rounds, local_iters=10)
-        # int8-wire overlay on the (equivalence-proven) vectorized engine
-        cfg_q = dataclasses.replace(cfg, wire_dtype="int8", engine="vectorized")
+        # int8-wire overlay on the (equivalence-proven) vectorized engine;
+        # telemetry stays on here — the recorder observes without perturbing
+        # (bitwise-equal runs; tests/test_telemetry.py) and its PhaseTimer
+        # gives the per-phase breakdown alongside the accuracy trace
+        cfg_q = dataclasses.replace(
+            cfg, wire_dtype="int8", engine="vectorized", telemetry=True
+        )
         t0 = time.time()
-        hist_q = make_simulation(cfg_q, shards, x_te, y_te).run()
+        sim_q = make_simulation(cfg_q, shards, x_te, y_te)
+        hist_q = sim_q.run()
         t_int8 = time.time() - t0
         acc_i = hist[-1]["acc_mean"]
         acc_c = hist_c[-1]["acc_mean"]
@@ -44,6 +56,10 @@ def run(rounds: int = 40, agent_counts=(10, 25, 50), out_json: str | None = None
             "ipls_int8": [h["acc_mean"] for h in hist_q],
             "final_drop_permille": drop_permille,
             "int8_drop_vs_f32": int8_drop,
+            "int8_phase_s": {
+                name: ent["mean_s"]
+                for name, ent in sim_q.recorder.timer.summary().items()
+            },
         }
         rows.append(
             csv_row(

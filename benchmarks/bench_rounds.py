@@ -31,6 +31,7 @@ from repro.analysis import analyze_paths
 from repro.data import iid_split
 from repro.fl import SimConfig, make_simulation
 from repro.p2p.network import LOSSY, PERFECT
+from repro.telemetry import host_metadata
 
 SCAN_W = 8  # window size for the scanned variant (matches acceptance bar)
 
@@ -87,15 +88,44 @@ def _time_engine(
     return dt / timed, dpr
 
 
+def _phase_attribution(
+    cfg: SimConfig, shards, x_te, y_te, rounds: int
+) -> dict:
+    """Per-phase wall seconds for a short telemetry-instrumented run.
+
+    The timed throughput rows stay telemetry-OFF (the < 2% overhead bar is
+    measured on the disabled path); this extra pass turns the recorder's
+    PhaseTimer on, drops the warm-up/compile round from the totals, and
+    returns mean seconds per phase — the dispatch-level breakdown that
+    attributes e.g. the int8 wire regression to its encode/decode stages.
+    """
+    sim = make_simulation(
+        dataclasses.replace(cfg, telemetry=True, rounds=1 + rounds),
+        shards, x_te, y_te,
+    )
+    sim.run_round(0)
+    _sync(sim)
+    sim.recorder.timer.totals.clear()  # compile lives in the warm-up round
+    for r in range(1, 1 + rounds):
+        sim.run_round(r)
+    _sync(sim)
+    return {
+        name: ent["mean_s"] for name, ent in sim.recorder.timer.summary().items()
+    }
+
+
 def run(
     rounds: int = 4,
     agent_counts=(10, 32, 100),
     lossy_agent_counts=(10, 32),
     out_json: str | None = None,
+    timestamp: str | None = None,
 ) -> List[str]:
     x_tr, y_tr, x_te, y_te = load_data(num_train=12000, num_test=800)
     rows: List[str] = []
-    results = {}
+    # the host stamp makes the persisted perf trajectory comparable across
+    # machines; the timestamp comes from the runner so this stays clock-free
+    results = {"host": host_metadata(timestamp)}
     variants = [("", PERFECT, agent_counts), ("_lossy", LOSSY, lossy_agent_counts)]
     for tag, cond, counts in variants:
         for n in counts:
@@ -170,12 +200,24 @@ def run(
             (time.perf_counter() - t0) / rounds,
             (sim._bytes_total - b0) / rounds,
         )
+    # dispatch-level attribution of the f32-vs-int8 gap: a second, short,
+    # telemetry-instrumented pass per wire mode (the timed rows above stay
+    # on the disabled path)
+    phase_s = {}
+    for wd in ("f32", "int8"):
+        cfg = SimConfig(
+            num_agents=n, num_partitions=10, pi=2, rho=2,
+            local_iters=2, batch_size=64, eval_agents=4,
+            conditions=LOSSY, wire_dtype=wd, engine="vectorized",
+        )
+        phase_s[wd] = _phase_attribution(cfg, shards, x_te, y_te, rounds)
     ratio = wire_stats["f32"][1] / wire_stats["int8"][1]
     for wd, (s_w, bpr) in wire_stats.items():
         extra = f";bytes_ratio_vs_f32={ratio:.2f}x" if wd == "int8" else ""
         results[f"wire_{wd}_lossy_n{n}"] = {
             "rounds_per_s": 1.0 / s_w,
             "bytes_per_round": bpr,
+            "phase_s": phase_s[wd],
             **({"bytes_ratio_vs_f32": ratio} if wd == "int8" else {}),
         }
         rows.append(

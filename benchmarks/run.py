@@ -32,6 +32,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     sys.stdout.flush()
     t0 = time.time()
+    # one runner-stamped timestamp for every artifact this invocation writes
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
 
     def want(name):
         return only is None or name in only
@@ -48,7 +50,7 @@ def main() -> None:
         # trajectory for the round engines and is uploaded as a CI artifact
         for r in bench_rounds.run(
             rounds=rounds, agent_counts=counts, lossy_agent_counts=lossy_counts,
-            out_json="BENCH_rounds.json",
+            out_json="BENCH_rounds.json", timestamp=stamp,
         ):
             print(r)
         sys.stdout.flush()
@@ -70,7 +72,8 @@ def main() -> None:
         rounds = 6 if args.quick else 40
         counts = (5,) if args.quick else (10, 25, 50)
         for r in bench_convergence.run(
-            rounds=rounds, agent_counts=counts, out_json="benchmarks/out_convergence.json"
+            rounds=rounds, agent_counts=counts,
+            out_json="benchmarks/out_convergence.json", timestamp=stamp,
         ):
             print(r)
         sys.stdout.flush()

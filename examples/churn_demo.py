@@ -3,6 +3,7 @@ training continues (paper §2.2 Terminate + Fig 3b).
 
     PYTHONPATH=src python examples/churn_demo.py
     PYTHONPATH=src python examples/churn_demo.py --engine vectorized --scan-rounds 7
+    PYTHONPATH=src python examples/churn_demo.py --metrics-out churn.jsonl --trace-out churn.trace.json
 
 The churn schedule needs the scalar engine (the vectorized engine assumes
 fixed membership); with --engine vectorized the demo drops churn and runs
@@ -24,7 +25,21 @@ def main():
         "--scan-rounds", type=int, default=0,
         help="vectorized only: fuse this many rounds per lax.scan device call",
     )
+    ap.add_argument(
+        "--telemetry", action="store_true",
+        help="record the per-round metric stream (docs/TELEMETRY.md)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write the metric stream as JSONL (implies --telemetry)",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write a Chrome trace-event JSON timeline (implies --telemetry); "
+        "open at https://ui.perfetto.dev",
+    )
     args = ap.parse_args()
+    telemetry = args.telemetry or bool(args.metrics_out or args.trace_out)
 
     x_tr, y_tr, x_te, y_te = synth_mnist(num_train=8000, num_test=2000, seed=0)
     shards = iid_split(x_tr, y_tr, num_agents=6, seed=0)
@@ -43,6 +58,7 @@ def main():
         num_agents=6, num_partitions=12, pi=3, rho=2, rounds=14,
         local_iters=8, churn=churn, memory=True, conditions=LOSSY,
         engine=args.engine, scan_rounds=args.scan_rounds,
+        telemetry=telemetry, trace=bool(args.trace_out),
     )
     sim = make_simulation(cfg, shards, x_te, y_te)
     for m in sim.run():
@@ -57,6 +73,15 @@ def main():
         print("\npartition coverage preserved through leave/crash/rejoin ✓")
     else:
         print(f"\ndevice dispatches: {sim.device_dispatches} for {cfg.rounds} rounds")
+    if args.metrics_out:
+        sim.recorder.write_jsonl(
+            args.metrics_out,
+            meta={"example": "churn_demo", "engine": args.engine},
+        )
+        print(f"metrics stream -> {args.metrics_out}")
+    if args.trace_out:
+        sim.recorder.trace.write(args.trace_out)
+        print(f"trace timeline -> {args.trace_out} (open in perfetto)")
 
 if __name__ == "__main__":
     main()

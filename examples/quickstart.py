@@ -7,6 +7,7 @@ centralized FedAvg baseline.
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --engine vectorized --scan-rounds 5
     PYTHONPATH=src python examples/quickstart.py --wire-dtype int8
+    PYTHONPATH=src python examples/quickstart.py --metrics-out run.jsonl --trace-out run.trace.json
 
 --wire-dtype int8 ships deltas and partition transfers as int8 codes with
 per-block power-of-two scales and error feedback (~4x less wire traffic,
@@ -39,7 +40,22 @@ def main():
         "--wire-dtype", default="f32", choices=["f32", "int8"],
         help="wire transport: raw f32 or int8 + error feedback (~4x less traffic)",
     )
+    ap.add_argument(
+        "--telemetry", action="store_true",
+        help="record the per-round metric stream (docs/TELEMETRY.md)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write the metric stream as JSONL (implies --telemetry); "
+        "summarize with `python -m repro.telemetry.report PATH`",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write a Chrome trace-event JSON timeline (implies --telemetry); "
+        "open at https://ui.perfetto.dev",
+    )
     args = ap.parse_args()
+    telemetry = args.telemetry or bool(args.metrics_out or args.trace_out)
 
     # 1. data: 60k synthetic MNIST-like samples, split IID over 5 agents
     x_tr, y_tr, x_te, y_te = synth_mnist(num_train=10000, num_test=2000, seed=0)
@@ -52,9 +68,20 @@ def main():
         rounds=10, local_iters=10, batch_size=128,
         engine=args.engine, scan_rounds=args.scan_rounds,
         wire_dtype=args.wire_dtype,
+        telemetry=telemetry, trace=bool(args.trace_out),
     )
     sim = make_simulation(cfg, shards, x_te, y_te)
     history = sim.run()
+    if args.metrics_out:
+        sim.recorder.write_jsonl(
+            args.metrics_out,
+            meta={"example": "quickstart", "engine": args.engine,
+                  "wire_dtype": args.wire_dtype},
+        )
+        print(f"metrics stream -> {args.metrics_out}")
+    if args.trace_out:
+        sim.recorder.trace.write(args.trace_out)
+        print(f"trace timeline -> {args.trace_out} (open in perfetto)")
 
     # 3. centralized FedAvg reference on the same shards
     central = run_centralized(shards, x_te, y_te, rounds=10, local_iters=10)

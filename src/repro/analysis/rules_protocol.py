@@ -65,6 +65,40 @@ SYMMETRY: Dict[str, Dict[str, Set[str]]] = {
 # engine side of each declared file, used by the table self-check
 ENGINE_SIDE = {"p2p/ipfs_sim.py": "scalar", "fl/vectorized.py": "vectorized"}
 
+# -- PR04: telemetry metric-schema symmetry ---------------------------------
+# Hardcoded mirrors of repro.telemetry.schema.FINISH_KEYS / CHANNELS.
+# tests/test_analysis.py cross-checks these against the live schema module,
+# so drift between the rule and the schema is itself a test failure.
+METRIC_FINISH_KEYS = (
+    "round",
+    "active",
+    "contrib",
+    "eps",
+    "delta_normsq",
+    "value_normsq",
+    "accs",
+    "bytes_total",
+    "msgs_total",
+    "drops_total",
+)
+METRIC_CHANNELS = (
+    "fetch",
+    "fetch_reply",
+    "update",
+    "update_reply",
+    "replica",
+    "member",
+)
+
+# Declared emitters: path suffix -> the function holding that engine's ONE
+# finish_round emission site. A file matching the suffix that defines the
+# function without a finish_round call inside it lost its emission site; a
+# partial file (fixture) omitting the function is skipped, like SYMMETRY.
+EMITTER_FUNCS: Dict[str, str] = {
+    "fl/rounds.py": "_tel_finish",
+    "fl/vectorized.py": "_emit_row",
+}
+
 _FAMILY = {
     "messages_sent": "messages_sent",
     "messages_dropped": "messages_dropped",
@@ -237,6 +271,117 @@ class WireBytesFromDtype(Rule):
                     ctx.path,
                     mult.lineno,
                     self._MSG.format(w=self._width(mult)),
+                )
+
+
+@register
+class MetricSchemaSymmetry(Rule):
+    """PR04: telemetry emission sites must speak the shared metric schema.
+    A ``finish_round(...)`` call must pass every schema key, as keywords,
+    and nothing else — a positional argument, an unknown key, or a
+    ``**kwargs`` splat is a row the byte-equality tests cannot pin; an
+    ``on_channel(...)`` call naming a channel outside the schema's channel
+    set creates traffic keys only one engine emits. Files declared in
+    ``EMITTER_FUNCS`` that define their emitter function must still contain
+    the emission call inside it."""
+
+    id = "PR04"
+    pack = "protocol"
+    title = "telemetry emission site diverges from the shared metric schema"
+
+    def _check_finish(self, ctx: FileContext, node: ast.Call) -> Iterator[Finding]:
+        if node.args:
+            yield Finding(
+                self.id,
+                ctx.path,
+                node.lineno,
+                "finish_round() takes schema keys as keywords only — a "
+                "positional argument bypasses the schema check",
+            )
+        passed = set()
+        for kw in node.keywords:
+            if kw.arg is None:
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    node.lineno,
+                    "finish_round(**kwargs) hides the emitted keys from the "
+                    "schema check — pass each schema key explicitly",
+                )
+                return
+            if kw.arg not in METRIC_FINISH_KEYS:
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    node.lineno,
+                    f"finish_round() passes '{kw.arg}', which is not in the "
+                    "telemetry schema (telemetry.schema.FINISH_KEYS) — one "
+                    "engine would emit a row shape the others don't",
+                )
+            passed.add(kw.arg)
+        missing = [k for k in METRIC_FINISH_KEYS if k not in passed]
+        if missing:
+            yield Finding(
+                self.id,
+                ctx.path,
+                node.lineno,
+                "finish_round() omits schema key(s) "
+                + ", ".join(f"'{k}'" for k in missing)
+                + " — every engine emits the full row every round",
+            )
+
+    def _check_channel(self, ctx: FileContext, node: ast.Call) -> Iterator[Finding]:
+        cands = []
+        if len(node.args) >= 2:
+            cands.append(node.args[1])
+        cands += [kw.value for kw in node.keywords if kw.arg == "channel"]
+        for arg in cands:
+            if (
+                isinstance(arg, ast.Constant)
+                and isinstance(arg.value, str)
+                and arg.value not in METRIC_CHANNELS
+            ):
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    node.lineno,
+                    f"on_channel() names unknown channel '{arg.value}' — "
+                    "traffic keys come from telemetry.schema.CHANNELS so "
+                    "both engines emit the same columns",
+                )
+
+    def check(self, ctx: FileContext, options: Options) -> Iterator[Finding]:
+        finish_fns: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+            ):
+                continue
+            if node.func.attr == "finish_round":
+                fn = ctx.enclosing_function(node)
+                if fn is not None:
+                    finish_fns.add(fn.name)
+                yield from self._check_finish(ctx, node)
+            elif node.func.attr == "on_channel":
+                yield from self._check_channel(ctx, node)
+
+        p = _norm(ctx.path)
+        for suffix, fn_name in EMITTER_FUNCS.items():
+            if not p.endswith(suffix):
+                continue
+            defined = any(
+                isinstance(n, ast.FunctionDef) and n.name == fn_name
+                for n in ast.walk(ctx.tree)
+            )
+            if defined and fn_name not in finish_fns:
+                yield Finding(
+                    self.id,
+                    ctx.path,
+                    1,
+                    f"'{fn_name}' is the declared telemetry emitter for this "
+                    "engine but contains no finish_round() call — the metric "
+                    "stream lost its emission site",
                 )
 
 

@@ -32,6 +32,8 @@ from repro.fl.local_trainer import LocalTrainer
 from repro.models import mlp_mnist
 from repro.p2p.ipfs_sim import SimIPFS
 from repro.p2p.network import PERFECT, NetworkConditions
+from repro.telemetry import NULL_TIMER, MetricsRecorder, TraceWriter
+from repro.telemetry.device import host_normsq
 
 # the simulation ticks the substrate 4 times per training round (after the
 # fetch requests, the fetch replies, the UpdateModel sends, and the
@@ -155,6 +157,15 @@ class SimConfig:
     # (block-int8 + per-block scales + error feedback on the delta channel —
     # ~4x fewer bytes_total; see core/wire.py and docs/ENGINE.md)
     wire_dtype: str = "f32"
+    # observability (repro.telemetry, docs/TELEMETRY.md): telemetry=True
+    # attaches a MetricsRecorder emitting one schema-ordered row per round —
+    # byte-for-byte identical across engines — plus per-phase wall timers;
+    # trace=True additionally records a Chrome trace-event timeline
+    # (protocol sends/deliveries/drops on simulated ticks + host phase
+    # spans). Both default off: the disabled path adds no device outputs
+    # (unchanged jaxprs) and no per-message work.
+    telemetry: bool = False
+    trace: bool = False
 
 
 def eval_subset(live: List[int], eval_agents: int) -> List[int]:
@@ -216,6 +227,27 @@ class IPLSSimulation:
                 a, x, y, cfg.lr, cfg.local_iters, cfg.batch_size, cfg.seed
             )
         self.history: List[dict] = []
+        # observability: attached AFTER init so the join/bootstrap traffic is
+        # excluded from the per-round streams in both engines identically
+        # (it still shows in the cumulative *_total counters via the pubsub)
+        self.recorder: Optional[MetricsRecorder] = None
+        self._pt = NULL_TIMER
+        if cfg.telemetry:
+            self.recorder = MetricsRecorder(
+                ticks_per_round=TICKS_PER_ROUND,
+                max_delay_ticks=cfg.conditions.max_delay_rounds,
+                trace=TraceWriter() if cfg.trace else None,
+            )
+            self._pt = self.recorder.timer
+            self.net.pubsub.telemetry = self.recorder
+            # padded instance width shared with the vectorized value planes
+            # (int8: whole quantization blocks, mirroring fl/vectorized.py)
+            from repro.core.wire import BLOCK as _WB
+
+            s_max = int(max(self.spec.sizes))
+            self._tel_S = (
+                -(-s_max // _WB) * _WB if cfg.wire_dtype == "int8" else s_max
+            )
 
     # -- churn handling -----------------------------------------------------
     def _apply_churn(self, rnd: int) -> None:
@@ -265,50 +297,73 @@ class IPLSSimulation:
     def run_round(self, rnd: int) -> dict:
         self._apply_churn(rnd)
         active = self._live_online()
+        rec = self.recorder
 
         # 0. collect missing global parameters (paper: 'each agent initially
         # contacts enough agents to collect the global parameters'; also how
         # rejoining agents warm back up)
-        for a in active:
-            self.agents[a].request_missing(rnd)
-        self.net.tick()
-        for a in active:
-            self.agents[a].serve_fetches()
-        self.net.tick()
-        for a in active:
-            self.agents[a].receive_replies()
+        with self._pt.phase("fetch"):
+            for a in active:
+                self.agents[a].request_missing(rnd)
+            self.net.tick()
+            for a in active:
+                self.agents[a].serve_fetches()
+            self.net.tick()
+            for a in active:
+                self.agents[a].receive_replies()
 
         # 1. local training + UpdateModel
-        for a in active:
-            if a not in self.trainers:
-                continue
-            w = self.agents[a].load_model()
-            delta = self.trainers[a].train_delta(w)
-            self.agents[a].update_model(delta, rnd)
-        self.net.tick()
+        deltas: List[np.ndarray] = []
+        with self._pt.phase("train"):
+            for a in active:
+                if a not in self.trainers:
+                    continue
+                w = self.agents[a].load_model()
+                delta = self.trainers[a].train_delta(w)
+                if rec is not None:
+                    deltas.append(delta)
+                self.agents[a].update_model(delta, rnd)
+            self.net.tick()
 
         # 2. holders aggregate + reply; replicas sync
-        for a in active:
-            self.agents[a].collect()
-        for a in active:
-            self.agents[a].aggregate()
-        for a in active:
-            self.agents[a].serve_replies()
-            self.agents[a].sync_replicas(rnd)
-        self.net.tick()
-        for a in active:
-            self.agents[a].receive_replies()
-            self.agents[a].merge_replicas()
+        with self._pt.phase("aggregate"):
+            for a in active:
+                self.agents[a].collect()
+            # contributor counts: captured between drain and aggregate, when
+            # every instance's pending buffer holds this round's full r
+            instances = contrib = None
+            if rec is not None:
+                instances = self._tel_instances()
+                contrib = [
+                    st.pending_n if st is not None else 0
+                    for st in self._tel_states(instances)
+                ]
+            for a in active:
+                self.agents[a].aggregate()
+            for a in active:
+                self.agents[a].serve_replies()
+                self.agents[a].sync_replicas(rnd)
+            self.net.tick()
+            for a in active:
+                self.agents[a].receive_replies()
+                self.agents[a].merge_replicas()
 
         # 3. evaluate the assembled model
-        metrics = self.evaluate()
+        with self._pt.phase("eval"):
+            accs = self._eval_accs()
+        metrics = self._acc_metrics(accs)
         metrics["round"] = rnd
         metrics["active"] = len(active)
         metrics["bytes_total"] = self.net.pubsub.total_bytes()
         self.history.append(metrics)
+        if rec is not None:
+            self._tel_finish(rnd, len(active), deltas, instances, contrib, accs)
         return metrics
 
     def evaluate(self) -> dict:
+        return self._acc_metrics(self._eval_accs())
+
+    def _eval_accs(self) -> np.ndarray:
         accs = []
         any_trainer = next(iter(self.trainers.values()))
         live = eval_subset(
@@ -317,12 +372,57 @@ class IPLSSimulation:
         for a in live:
             w = self.agents[a].load_model()
             accs.append(any_trainer.evaluate(w, self.x_test, self.y_test))
-        accs = np.array(accs) if accs else np.array([0.0])
+        return np.array(accs) if accs else np.array([0.0])
+
+    @staticmethod
+    def _acc_metrics(accs: np.ndarray) -> dict:
         return {
             "acc_mean": float(accs.mean()),
             "acc_std": float(accs.std()),
             "acc_max": float(accs.max()),
         }
+
+    # -- telemetry emission (one finish_round per round; see repro.telemetry)
+    def _tel_instances(self) -> List[Tuple[int, int]]:
+        """(partition, holder) instance list, k-major in holder order — the
+        row order of the vectorized engine's value tables."""
+        return [
+            (k, h)
+            for k in range(self.cfg.num_partitions)
+            for h in self.table.holders_of(k)
+        ]
+
+    def _tel_states(self, instances):
+        for k, h in instances:
+            ag = self.agents.get(h)
+            yield ag.owned.get(k) if ag is not None else None
+
+    def _tel_finish(self, rnd, n_active, deltas, instances, contrib, accs):
+        S = self._tel_S
+        V = np.zeros((len(instances), S), np.float32)
+        eps = []
+        for i, st in enumerate(self._tel_states(instances)):
+            if st is not None:
+                V[i, : st.value.size] = st.value
+                eps.append(st.eps)
+            else:
+                eps.append(1.0)
+        if deltas:
+            dn = host_normsq(np.stack(deltas))
+        else:
+            dn = 0.0
+        self.recorder.finish_round(
+            round=rnd,
+            active=n_active,
+            contrib=contrib,
+            eps=eps,
+            delta_normsq=dn,
+            value_normsq=host_normsq(V),
+            accs=accs,
+            bytes_total=self.net.pubsub.total_bytes(),
+            msgs_total=self.net.pubsub.messages_sent,
+            drops_total=self.net.pubsub.messages_dropped,
+        )
 
     def run(self) -> List[dict]:
         for rnd in range(self.cfg.rounds):

@@ -75,6 +75,7 @@ from repro.core.wire import BLOCK as WBLOCK
 from repro.core.wire import dequantize_rows, qdq_rows, quantize_rows, wire_size
 from repro.kernels.ipls_aggregate.ops import aggregate_batched, aggregate_batched_q
 from repro.models import mlp_mnist
+from repro.telemetry.device import metric_pair
 
 # cache-event value sources (see _run_round_lossy)
 _KIND_START = 0  # holder value at the start of the serve round (fetch reply)
@@ -163,6 +164,13 @@ class VectorizedIPLSSimulation:
         # exact init state + init-phase traffic via the scalar constructor
         seed_sim = IPLSSimulation(cfg, shards, x_test, y_test)
         self.net = seed_sim.net
+        # telemetry handoff: this engine emits the same per-round stream
+        # through the seed's recorder, but feeds it from the control plane /
+        # closed-form traffic instead of the pubsub taps — detach the pubsub
+        # hook so nothing double-counts (rounds never touch the pubsub here)
+        self.recorder = seed_sim.recorder
+        self._pt = seed_sim._pt
+        self.net.pubsub.telemetry = None
         self.spec = seed_sim.spec
         self.table = seed_sim.table
         self.layout = seed_sim.layout
@@ -222,9 +230,10 @@ class VectorizedIPLSSimulation:
                 st = seed_sim.agents[h].owned[k]
                 V_pre[inst_id[(k, j)], : sizes[k]] = st.value
                 eps[inst_id[(k, j)]] = st.eps
-        V_merged = np.zeros((K, self.S), np.float32)
-        for k in range(K):
-            V_merged[k] = V_pre[inst_id[(k, 0)]]
+        # per-INSTANCE merged table (all replicas equal at init); each
+        # holder's own sequential merge can differ by ULP at rho >= 3, so a
+        # per-partition row cannot represent the scalar oracle's state
+        V_merged = V_pre.copy()
         owner_col = np.zeros((A, K), bool)
         for k in range(K):
             for h in holders[k]:
@@ -263,14 +272,20 @@ class VectorizedIPLSSimulation:
         # round-0 warm-up traffic (agents fetch partitions absent from both
         # their owned set and the donor caches left behind by joins)
         fetch_bytes = fetch_msgs = 0
+        fetch_pairs = fetch_rep_bytes = 0
         for a in range(A):
             ag = seed_sim.agents[a]
             for k in range(K):
                 if k not in ag.owned and k not in ag.cache:
                     fetch_bytes += 16 + int(self._wsizes[k])
                     fetch_msgs += 2  # the fetch and its reply
+                    fetch_pairs += 1
+                    fetch_rep_bytes += int(self._wsizes[k])
         self._round0_fetch_bytes = fetch_bytes
         self._round0_fetch_msgs = fetch_msgs
+        # per-channel split of the same closed forms (telemetry stream)
+        self._tel_r0_fetch_n = fetch_pairs
+        self._tel_r0_fetch_rep_bytes = fetch_rep_bytes
 
         # steady-state per-round traffic: every agent updates every non-owned
         # partition (one wire payload up + one reply) and each replica of a
@@ -279,6 +294,15 @@ class VectorizedIPLSSimulation:
         replica = int(np.sum(np.where(rho > 1, rho * self._wsizes, 0)))
         self._round_bytes = 2 * upd + replica
         self._round_msgs = 2 * int(np.sum(A - rho)) + int(np.sum(np.where(rho > 1, rho, 0)))
+        # per-channel steady-state traffic (telemetry stream): one UpdateModel
+        # up + one reply back per (agent, non-owned partition); each replica
+        # of a rho_k>1 partition publishes once, fanning out to the rho_k-1
+        # other subscribers of the partition topic
+        self._tel_upd_msgs = int(np.sum(A - rho))
+        self._tel_upd_bytes = upd
+        self._tel_rep_msgs = int(np.sum(np.where(rho > 1, rho, 0)))
+        self._tel_rep_bytes = replica
+        self._tel_rep_deliv = int(np.sum(np.where(rho > 1, rho * (rho - 1), 0)))
 
         # ---- per-phase routing tables (period = lcm of replication) -------
         # non-owner a targets H(k)[(round + a) % rho_k]; the pattern repeats
@@ -298,10 +322,14 @@ class VectorizedIPLSSimulation:
                 jsel = (p + agents_arr) % rk
                 for a in range(A):
                     if owner_col[a, k]:
-                        # owners read the post-consensus value: index into the
-                        # merged section of the concatenated [V_pre; V_merged]
-                        # value table the W-rebuild gathers from
-                        t_inst[a, k] = self.K_inst + k
+                        # owners read their OWN replica's post-consensus value:
+                        # index into the merged section of the concatenated
+                        # [V_pre; V_merged] value table the W-rebuild gathers
+                        # from. Merged values are per-instance, not per-
+                        # partition: the scalar oracle's mean starts at the
+                        # holder's own value, so at rho >= 3 each holder's
+                        # merged row differs by association order.
+                        t_inst[a, k] = self.K_inst + inst_id[(k, holders[k].index(a))]
                     else:
                         i = inst_id[(k, int(jsel[a]))]
                         t_inst[a, k] = i
@@ -325,6 +353,24 @@ class VectorizedIPLSSimulation:
             self._contrib_mask.append(msk)
             self._contrib_M.append(M)
 
+        # ---- replica-merge order (static under PERFECT) -------------------
+        # scalar merge: np.mean over [own post-agg value] + arrivals; under
+        # PERFECT the arrivals drain in publish order = holder agent
+        # ascending. The sequential-sum merge must associate in exactly that
+        # order, starting from the instance's own row.
+        max_rho = int(rho.max()) if len(rho) else 1
+        morder = np.zeros((self.K_inst, max_rho), np.int32)
+        mmask = np.zeros((self.K_inst, max_rho), np.float32)
+        for k in range(K):
+            ids = [inst_id[(k, j)] for j in range(len(holders[k]))]
+            by_agent = sorted(ids, key=lambda i: int(self._inst_owner[i]))
+            for i in ids:
+                row = [i] + [o for o in by_agent if o != i]
+                morder[i, : len(row)] = row
+                mmask[i, : len(row)] = 1.0
+        self._morder_perf = morder
+        self._mmask_perf = mmask
+
         # ---- state carried across rounds ---------------------------------
         # only the small per-instance value tables persist; the (A, N)
         # weight matrix is an INTERNAL tensor of the fused round call (never
@@ -334,6 +380,25 @@ class VectorizedIPLSSimulation:
         self._V_merged = jnp.asarray(V_merged)
         self._eps = jnp.asarray(eps)
         self._last_phase = self._period - 1  # any phase: all replicas equal at init
+
+        if self.recorder is not None:
+            # eps replay on the host in float64: the scalar engine's eps is a
+            # python float, and the device's f32 recursion drifts by an ULP —
+            # the telemetry stream must carry the scalar's exact values. The
+            # PERFECT contributor counts are static per routing phase.
+            self._tel_eps64 = np.asarray(
+                [
+                    seed_sim.agents[int(self._inst_owner[i])]
+                    .owned[int(self._inst_k[i])]
+                    .eps
+                    for i in range(self.K_inst)
+                ],
+                np.float64,
+            )
+            self._tel_r = [
+                self._contrib_mask[p].sum(axis=1).astype(np.int64)
+                for p in range(self._period)
+            ]
 
         self._build_jitted()
 
@@ -381,45 +446,76 @@ class VectorizedIPLSSimulation:
         # contiguous row range of the (K_inst, A) contribution matrix
         inst_row0 = [int(rows[0]) if len(rows) else 0 for rows in inst_of_k]
 
+        morder = jnp.asarray(self._morder_perf)
+        mmask_m = jnp.asarray(self._mmask_perf)
+        max_rho = int(self._morder_perf.shape[1])
+        rho_inst = jnp.asarray(
+            np.bincount(self._inst_k, minlength=K).astype(np.float32)[self._inst_k]
+        )
+        R_cap = int(self.R_cap)
+
         def agg_merge(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M):
             """Aggregation + replica consensus, given the pre/post local-SGD
-            weight matrices. Holder h's received-delta sum for an instance is
-            the masked column reduction M @ (W - W2) over its partition
-            window — computed as two GEMMs so the (A, N) delta matrix is
-            never materialized."""
+            weight matrices. The contributor gather + sequential masked sum
+            reduces each instance's deltas in the scalar oracle's pending
+            order (own push first, then arrivals agent-ascending), so the
+            f32 associations match the scalar engine bit-for-bit."""
             # eps recursion refreshed from r BEFORE applying (paper §2.2)
             r = jnp.sum(contrib_mask, axis=1)
             eps_new = jnp.where(
                 r > 0, alpha * eps + (1.0 - alpha) / jnp.maximum(r, 1.0), eps
             )
-            base = V_merged[inst_k]
+            base = V_merged
+            D = W - W2
             if use_kernel:
-                # TPU: lay the deltas out (K_inst, R, S) and aggregate every
-                # (partition, replica-slot) instance in ONE kernel launch.
-                # The kernel computes w - eps*masked_sum, exactly the scalar
-                # engine's update (the 1/r lives in the eps recursion).
-                D = W - W2
+                # TPU: aggregate every (partition, replica-slot) instance in
+                # ONE kernel launch. The kernel computes w - eps*masked_sum,
+                # exactly the scalar engine's update (the 1/r lives in the
+                # eps recursion).
                 lane = jnp.arange(S, dtype=jnp.int32)
-                valid = lane[None, :] < size_inst[:, None]      # (K_inst, S)
+                valid = lane[None, :] < size_inst[:, None]   # (K_inst, S)
                 col = jnp.where(valid, off_inst[:, None] + lane[None, :], 0)
-                G = D[contrib_idx[:, :, None], col[:, None, :]]  # (K_inst,R,S)
+                G = D[contrib_idx[:, :, None], col[:, None, :]]
                 G = G * valid[:, None, :]
                 V_pre = aggregate_batched(base, G, contrib_mask, eps_new)
             else:
-                # CPU/GPU: K small masked matmuls, identical math
-                V_pre = base
+                # CPU/GPU: per-partition static column slice + whole-row
+                # gathers (memcpy-speed; an element-indexed (K_inst, R, S)
+                # gather is a scalar loop on the CPU backend), reduced with
+                # a sequential masked sum over the contributor slots in
+                # scalar pending order, then one FMA-contracted update
+                parts = []
                 for k in range(K):
                     rows = inst_of_k[k]
-                    Mk = contrib_M[inst_row0[k] : inst_row0[k] + len(rows)]
-                    Wk = jax.lax.dynamic_slice(W, (0, int(offsets[k])), (A, int(sizes[k])))
-                    W2k = jax.lax.dynamic_slice(W2, (0, int(offsets[k])), (A, int(sizes[k])))
-                    agg_k = Mk @ Wk - Mk @ W2k                   # (rho_k, s_k)
-                    upd = base[rows, : sizes[k]] - eps_new[rows, None] * agg_k
-                    V_pre = V_pre.at[rows, : sizes[k]].set(upd)
-            # replica consensus: mean over each partition's replica slots
-            V_merged_new = (
-                jax.ops.segment_sum(V_pre, inst_k, num_segments=K) / counts[:, None]
-            )
+                    if len(rows) == 0:
+                        continue
+                    o, sz = int(offsets[k]), int(sizes[k])
+                    Dk = jax.lax.slice(D, (0, o), (A, o + sz))
+                    agg_k = jnp.zeros((len(rows), sz), jnp.float32)
+                    for j in range(R_cap):
+                        gj = Dk[contrib_idx[rows, j]]
+                        agg_k = jnp.where(
+                            contrib_mask[rows, j, None] > 0, agg_k + gj, agg_k
+                        )
+                    parts.append(jnp.pad(agg_k, ((0, 0), (0, S - sz))))
+                agg = jnp.concatenate(parts, axis=0)
+                V_pre = base - eps_new[:, None] * agg
+            # pin ONE materialization of V_pre: without the barrier XLA may
+            # recompute it at the merge's gather site with a different FMA
+            # contraction than the direct use, skewing merged rows by an ULP
+            V_pre = jax.lax.optimization_barrier(V_pre)
+            # replica consensus: each instance averages [self] + the other
+            # replicas in arrival (holder agent ascending) order — the
+            # scalar engine's np.mean associates exactly this way
+            acc = V_pre
+            for j in range(1, max_rho):
+                acc = jnp.where(
+                    mmask_m[:, j, None] > 0, acc + V_pre[morder[:, j]], acc
+                )
+            # barrier the (constant) divisor too: XLA folds division by a
+            # constant into multiply-by-reciprocal, off by an ULP for
+            # rho=3 — scalar np.mean does a true divide
+            V_merged_new = acc / jax.lax.optimization_barrier(rho_inst)[:, None]
             return V_pre, V_merged_new, eps_new
 
         def eval_rows(V_pre, V_merged_new, t_eval):
@@ -430,11 +526,19 @@ class VectorizedIPLSSimulation:
                 lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
             )(W_eval)
 
+        # telemetry: a python-bool trace-time gate — False leaves every
+        # jitted program EXACTLY as before (no extra outputs in the jaxpr);
+        # True adds one (2,) aux output per round with the f32 norm metrics
+        tel = self.recorder is not None
+
         def round_core(V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M, t_eval):
             V_pre, V_merged_new, eps_new = agg_merge(
                 V_merged, eps, W, W2, contrib_idx, contrib_mask, contrib_M
             )
-            return V_pre, V_merged_new, eps_new, eval_rows(V_pre, V_merged_new, t_eval)
+            out = (V_pre, V_merged_new, eps_new, eval_rows(V_pre, V_merged_new, t_eval))
+            if tel:
+                out = out + (metric_pair(W - W2, V_merged_new),)
+            return out
 
         buckets = self._buckets
 
@@ -480,11 +584,13 @@ class VectorizedIPLSSimulation:
                     )
                 else:
                     accs = eval_rows(V_pre2, V_m2, t_eval)
+                if tel:
+                    return (V_pre2, V_m2, eps2), (accs, metric_pair(W - W2, V_m2))
                 return (V_pre2, V_m2, eps2), accs
 
             def scan_window(V_pre, V_merged, eps, xs_all):
-                carry, accs = jax.lax.scan(body, (V_pre, V_merged, eps), xs_all)
-                return carry + (accs,)
+                carry, ys = jax.lax.scan(body, (V_pre, V_merged, eps), xs_all)
+                return carry + (ys if tel else (ys,))
 
             return jax.jit(scan_window, donate_argnums=(0, 1, 2))
 
@@ -532,6 +638,12 @@ class VectorizedIPLSSimulation:
             -(-cond.max_delay_rounds // TICKS_PER_ROUND) if cond.delay_prob > 0 else 0
         )
         self._HD = self._Lu + 1  # history ring depth (value ages 0..Lu)
+        # sequential-reduction capacities for the ordered gather paths:
+        # each other replica of a partition has at most one value in flight
+        # per send round (ages 0..Lu), and each non-owner at most one
+        # UpdateModel delta per in-flight send round
+        self._mw = max(1, (int(rho.max()) - 1) * self._HD) if len(rho) else 1
+        self._cw = 1 + self._HD * (A - 1)
         # int8 under PERFECT conditions also runs this path; the scalar
         # engine never installed a fate stream there, so build one — every
         # draw degenerates to (delivered, delay 0), i.e. default delivery
@@ -657,6 +769,8 @@ class VectorizedIPLSSimulation:
         LA = (Lu + 1) * A
         use_kernel = self._use_kernel
         int8 = self._int8
+        CW = int(self._cw)   # contributor slots (CPU sequential-sum path)
+        MW = int(self._mw)   # replica-merge slots (ordered sequential merge)
         # (A, K, S) delta-plane gather maps: row (a, k) is agent a's slice of
         # partition k, zero beyond s_k (whole zero blocks quantize to zero)
         lane_s = np.arange(S)
@@ -703,7 +817,7 @@ class VectorizedIPLSSimulation:
             return Vstart_new, C0, W
 
         def core_main(V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
-                      M_all, eps_new, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+                      msrc, eps_new, mmask, merge_cnt, c2_mask, c2_src, kidx, kmask):
             """Phases 2-3: aggregate every (partition, replica-slot) instance
             from the current + in-flight delta windows, run the
             version-filtered replica consensus, reply-driven cache updates,
@@ -779,27 +893,49 @@ class VectorizedIPLSSimulation:
                     G = G * valid[:, None, :]
                     V_agg = aggregate_batched(V, G, kmask, eps_new)
                 else:
-                    # CPU/GPU: K masked matmuls over the stacked delta windows
-                    V_agg = V
+                    # CPU/GPU: per-partition static column slice + whole-row
+                    # gathers of the contributor rows in scalar DELIVERY
+                    # order (kidx, own delta first), reduced with a
+                    # sequential masked sum, so the f32 associations match
+                    # the scalar oracle's np.sum over pending deltas (an
+                    # element-indexed gather is a scalar loop on CPU)
+                    parts = []
                     for k in range(K):
                         rows = inst_of_k[k]
-                        Mk = M_all[inst_row0[k] : inst_row0[k] + len(rows)]
-                        Dk = jax.lax.dynamic_slice(
-                            D_all, (0, int(offsets[k])), (LA, int(sizes[k]))
-                        )
-                        agg_k = Mk @ Dk
-                        upd = V[rows, : sizes[k]] - eps_new[rows, None] * agg_k
-                        V_agg = V_agg.at[rows, : sizes[k]].set(upd)
+                        if len(rows) == 0:
+                            continue
+                        o, sz = int(offsets[k]), int(sizes[k])
+                        Dk = jax.lax.slice(D_all, (0, o), (LA, o + sz))
+                        agg_k = jnp.zeros((len(rows), sz), jnp.float32)
+                        for j in range(CW):
+                            gj = Dk[kidx[rows, j]]
+                            agg_k = jnp.where(
+                                kmask[rows, j, None] > 0, agg_k + gj, agg_k
+                            )
+                        parts.append(jnp.pad(agg_k, ((0, 0), (0, S - sz))))
+                    agg = jnp.concatenate(parts, axis=0)
+                    V_agg = V - eps_new[:, None] * agg
                 ring_new = jnp.concatenate([D_use[None], ring], axis=0)[:Lu]
+            # pin ONE materialization before the merge gathers the wire
+            # image: a recompute at the gather site may pick a different FMA
+            # contraction than the direct use (see the PERFECT-path barrier)
+            V_agg = jax.lax.optimization_barrier(V_agg)
             # everything a post-aggregate value feeds (UpdateModel-reply
             # cache writes, replica publishes) crossed the wire: ring/table
             # the wire image, keep the authoritative V_agg raw
             V_aggw = qdq_rows(V_agg) if int8 else V_agg
             # replica consensus: mean of self + version-kept arrived values
-            # (late values read the post-aggregate ring at their send age)
-            Vm_src = jnp.concatenate([V_aggw[None], Vagg_hist[: HD - 1]], axis=0)
-            contrib = jnp.einsum("lij,ljs->is", Gm, Vm_src)
-            V_new = (V_agg + contrib) / (1.0 + merge_cnt)[:, None]
+            # (late values read the post-aggregate ring at their send age).
+            # Sequential adds in the control plane's landing-tick order keep
+            # the association identical to the scalar np.mean over
+            # [self] + arrivals.
+            Vm_flat = jnp.concatenate(
+                [V_aggw[None], Vagg_hist[: HD - 1]], axis=0
+            ).reshape(HD * K_inst, S)
+            acc = V_agg
+            for j in range(MW):
+                acc = jnp.where(mmask[:, j, None] > 0, acc + Vm_flat[msrc[:, j]], acc)
+            V_new = acc / (1.0 + merge_cnt)[:, None]
             # phase-2 cache updates (may reference this round's post-agg table)
             T2 = jnp.concatenate(
                 [
@@ -823,14 +959,22 @@ class VectorizedIPLSSimulation:
                 lambda w: mlp_mnist.evaluate(unflatten_params(w, layout), x_te, y_te)
             )(W_eval)
 
+        # telemetry: python-bool trace-time gate — False keeps every jitted
+        # program's jaxpr unchanged; True adds the (2,) f32 norm-metric aux
+        # output (deltas RAW pre-quantize, values the authoritative plane)
+        tel = self.recorder is not None
+
         def core(V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
-                 M_all, eps, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask):
+                 msrc, eps, mmask, merge_cnt, c2_mask, c2_src, kidx, kmask):
             V_new, C2, ring_new, Vagg_hist_new, E_new = core_main(
                 V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
-                M_all, eps, Gm, merge_cnt, c2_mask, c2_src, kidx, kmask,
+                msrc, eps, mmask, merge_cnt, c2_mask, c2_src, kidx, kmask,
             )
             accs = eval_lossy(V_new, C2)
-            return V_new, C2, ring_new, Vagg_hist_new, E_new, accs
+            out = (V_new, C2, ring_new, Vagg_hist_new, E_new, accs)
+            if tel:
+                out = out + (metric_pair(D_now, V_new),)
+            return out
 
         buckets = self._buckets
         E = len(self._eval_idx)
@@ -854,14 +998,14 @@ class VectorizedIPLSSimulation:
 
             def body(carry, xs):
                 V, C, ring, Vagg_hist, Vstart_hist, Eres = carry
-                (Xr, Yr, c0_mask, c0_src, M_all, eps, Gm, cnt,
+                (Xr, Yr, c0_mask, c0_src, msrc, eps, mmask, cnt,
                  c2_mask, c2_src, kidx, kmask, de) = xs
                 Vstart_new, C0, W = pre(V, C, Vstart_hist, Vagg_hist, c0_mask, c0_src)
                 W2 = sgd_all(W, Xr, Yr)
                 D_now = W - W2
                 V_new, C2, ring_new, Vagg_hist_new, E_new = core_main(
                     V, C0, D_now, ring, Vagg_hist, Vstart_new, Eres,
-                    M_all, eps, Gm, cnt, c2_mask, c2_src, kidx, kmask,
+                    msrc, eps, mmask, cnt, c2_mask, c2_src, kidx, kmask,
                 )
                 if gate_eval:
                     accs = jax.lax.cond(
@@ -871,9 +1015,10 @@ class VectorizedIPLSSimulation:
                     )
                 else:
                     accs = eval_lossy(V_new, C2)
-                return (
-                    V_new, C2, ring_new, Vagg_hist_new, Vstart_new, E_new
-                ), accs
+                carry_new = (V_new, C2, ring_new, Vagg_hist_new, Vstart_new, E_new)
+                if tel:
+                    return carry_new, (accs, metric_pair(D_now, V_new))
+                return carry_new, accs
 
             def scan_window(V, C, ring, Vagg_hist, Vstart_hist, Eres, xs_all):
                 return jax.lax.scan(
@@ -925,6 +1070,7 @@ class VectorizedIPLSSimulation:
         t = self._t
         TICKS = self._ticks
         f = self._fates
+        rec = self.recorder
         A, K, K_inst = self.A, self.K, self.K_inst
         Lu, HD = self._Lu, self._HD
         sizes = self._sizes
@@ -948,6 +1094,11 @@ class VectorizedIPLSSimulation:
             msgs += n_need
             nbytes += 16 * n_need
             drops += int((need & ~de).sum())
+            if rec is not None:
+                rec.on_channel(
+                    rnd, "fetch", n_need, 16 * n_need, int((need & ~de).sum())
+                )
+                rec.on_delays(rnd, dl[need & de])
             lat = lat_rounds(dl)
             for a, k in np.argwhere(need & de):
                 self._serve_ring[(t + int(lat[a, k])) % self._qdepth].append(
@@ -958,16 +1109,24 @@ class VectorizedIPLSSimulation:
         serves, self._serve_ring[t % self._qdepth] = (
             self._serve_ring[t % self._qdepth], []
         )
+        sv_bytes = sv_drops = 0
+        sv_delays: List[int] = []
         for send_r, a, k, inst in serves:
             de1, d1 = f.draw_one(CH_FETCH_REPLY, t, a, k, int(self._inst_owner[inst]))
             msgs += 1
             nbytes += int(self._wsizes[k])
+            sv_bytes += int(self._wsizes[k])
             if de1:
                 self._push_cache_event(
                     TICKS * t + 1 + d1, TICKS * t + 1, a, k, _KIND_START, t, inst
                 )
+                sv_delays.append(d1)
             else:
                 drops += 1
+                sv_drops += 1
+        if rec is not None and serves:
+            rec.on_channel(rnd, "fetch_reply", len(serves), sv_bytes, sv_drops)
+            rec.on_delays(rnd, sv_delays)
 
         # ---- phase 2: UpdateModel sends -----------------------------------
         de_u, dl_u = wf.slice("update", t) if wf else f.draw(CH_UPDATE, t, a_col, k_row)
@@ -981,6 +1140,12 @@ class VectorizedIPLSSimulation:
         # same-send-round arrivals drain delay-ascending first, then publish
         # (a, k) order. np.unique gives the delays sorted ascending.
         live_u = nonown & de_u
+        if rec is not None:
+            rec.on_channel(
+                rnd, "update", self._upd_msgs, self._upd_bytes,
+                int((nonown & ~de_u).sum()),
+            )
+            rec.on_delays(rnd, dl_u[live_u])
         for d in np.unique(dl_u[live_u]):
             for a, k in np.argwhere(live_u & (dl_u == d)):
                 self._arr_ring[(t + int(lat_u[a, k])) % self._qdepth].append(
@@ -1020,6 +1185,12 @@ class VectorizedIPLSSimulation:
             msgs += len(arrivals)
             nbytes += int(np.sum(self._wsizes[arr[:, 1]]))
             drops += int((~de_r).sum())
+            if rec is not None:
+                rec.on_channel(
+                    rnd, "update_reply", len(arrivals),
+                    int(np.sum(self._wsizes[arr[:, 1]])), int((~de_r).sum()),
+                )
+                rec.on_delays(rnd, d_r[de_r])
             for j in np.nonzero(de_r)[0]:
                 self._push_cache_event(
                     TICKS * t + 3 + int(d_r[j]), TICKS * t + 3,
@@ -1042,22 +1213,39 @@ class VectorizedIPLSSimulation:
                 )
             )
             drops += int((~de_p).sum())
+            if rec is not None:
+                rec.on_channel(
+                    rnd, "replica", self._pub_msgs, self._pub_bytes,
+                    int((~de_p).sum()),
+                )
+                rec.on_delays(rnd, dl_p[de_p])
             lat_p = lat_rounds(dl_p)
             for j in np.nonzero(de_p)[0]:
                 si, di = int(self._rep_src[j]), int(self._rep_dst[j])
                 self._merge_ring[(t + int(lat_p[j])) % self._qdepth].append(
-                    (t, si, di, int(ver_after[si]))
+                    (t, si, di, int(ver_after[si]), int(dl_p[j]))
                 )
 
         # ---- merge set: version-filtered replica values due this round ----
-        Gm = np.zeros((HD, K_inst, K_inst), np.float32)
+        # ordered columns into the flattened (HD*K_inst) value-history table,
+        # sorted by landing tick (then source agent) = the scalar inbox's
+        # FIFO drain order, so the device's sequential merge associates
+        # exactly like the scalar oracle's np.mean over [self] + arrivals
+        MW = self._mw
+        msrc = np.zeros((K_inst, MW), np.int32)
+        mmsk = np.zeros((K_inst, MW), np.float32)
         cnt = np.zeros(K_inst, np.float32)
         merges, self._merge_ring[t % self._qdepth] = (
             self._merge_ring[t % self._qdepth], []
         )
-        for send_r, si, di, ver_sent in merges:
+        merges.sort(
+            key=lambda e: (e[0] * TICKS + 2 + e[4], int(self._inst_owner[e[1]]))
+        )
+        for send_r, si, di, ver_sent, _d in merges:
             if ver_sent >= ver_after[di]:
-                Gm[t - send_r, di, si] += 1.0
+                col = int(cnt[di])
+                msrc[di, col] = (t - send_r) * K_inst + si
+                mmsk[di, col] = 1.0
                 cnt[di] += 1.0
         self._ver = ver_after
 
@@ -1084,67 +1272,98 @@ class VectorizedIPLSSimulation:
                 c2_src[a, k] = idx
             self._has_cache[a, k] = True  # suppresses fetches from round t+1
 
-        # ---- kernel-path contributor gathers ------------------------------
-        # slot order IS reduction order for the sequential-sum kernel, so it
-        # must be the scalar pending order: own delta first (the local push
+        # ---- contributor gathers (kernel + CPU sequential-sum paths) ------
+        # slot order IS reduction order for the sequential sum, so it must
+        # be the scalar pending order: own delta first (the local push
         # precedes the inbox drain), then arrivals in delivery order. The
         # quantized kernel takes the owner's raw delta through a dedicated
-        # input summed first, so its table holds only the remote rows.
+        # input summed first, so its table holds only the remote rows; the
+        # CPU path gathers from the wire-image delta plane, where the
+        # owner's raw slice is already mixed in.
         if self._use_kernel:
-            kidx = np.zeros((K_inst, self.R_cap), np.int32)
-            kmask = np.zeros((K_inst, self.R_cap), np.float32)
-            for i in range(K_inst):
-                rows = contrib_cols[i]
-                if not self._int8:
-                    rows = [int(self._inst_owner[i])] + rows
-                kidx[i, : len(rows)] = rows
-                kmask[i, : len(rows)] = 1.0
+            width = self.R_cap
+            add_owner = not self._int8
         else:
-            kidx = np.zeros((1, 1), np.int32)
-            kmask = np.zeros((1, 1), np.float32)
+            width = self._cw
+            add_owner = True
+        kidx = np.zeros((K_inst, width), np.int32)
+        kmask = np.zeros((K_inst, width), np.float32)
+        for i in range(K_inst):
+            rows = contrib_cols[i]
+            if add_owner:
+                rows = [int(self._inst_owner[i])] + rows
+            kidx[i, : len(rows)] = rows
+            kmask[i, : len(rows)] = 1.0
 
         self._t = t + 1
-        return dict(
+        ctl = dict(
             rnd=rnd, c0_mask=c0_mask, c0_src=c0_src, c2_mask=c2_mask,
-            c2_src=c2_src, M_all=M_all, eps=self._eps64.astype(np.float32),
-            Gm=Gm, cnt=cnt, kidx=kidx, kmask=kmask,
+            c2_src=c2_src, msrc=msrc, eps=self._eps64.astype(np.float32),
+            mmask=mmsk, cnt=cnt, kidx=kidx, kmask=kmask,
             msgs=msgs, drops=drops, nbytes=nbytes,
         )
+        if rec is not None:
+            # snapshots for the round's finish_round emission: contributor
+            # counts and the post-recursion f64 eps (self._eps64 mutates
+            # every round, so the window runner needs per-round copies)
+            ctl["r_vec"] = r_vec.astype(np.int64)
+            ctl["eps64"] = self._eps64.copy()
+        return ctl
 
     def _run_round_lossy(self, rnd: int) -> dict:
-        ctl = self._control_round(rnd)
+        pt = self._pt
+        with pt.phase("control"):
+            ctl = self._control_round(rnd)
 
         # ---- device calls -------------------------------------------------
-        xs, ys = self._draw_batches()
-        Vstart_new, C0, W = self._lossy_pre_j(
-            self._Vl, self._C, self._Vstart_hist, self._Vagg_hist,
-            jnp.asarray(ctl["c0_mask"]), jnp.asarray(ctl["c0_src"]),
-        )
-        if len(self._buckets) == 1:
-            D_now = self._batched_deltas_keep(
-                W, jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+        with pt.phase("batches"):
+            xs, ys = self._draw_batches()
+        with pt.phase("device_pre"):
+            Vstart_new, C0, W = self._lossy_pre_j(
+                self._Vl, self._C, self._Vstart_hist, self._Vagg_hist,
+                jnp.asarray(ctl["c0_mask"]), jnp.asarray(ctl["c0_src"]),
             )
-        else:
-            parts = [
-                self._batched_deltas_keep(
-                    W[lo:hi],
-                    jnp.asarray(np.stack(xs[lo:hi])),
-                    jnp.asarray(np.stack(ys[lo:hi])),
+            if pt.sync:
+                jax.block_until_ready(W)
+        with pt.phase("device_sgd"):
+            if len(self._buckets) == 1:
+                D_now = self._batched_deltas_keep(
+                    W, jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
                 )
-                for lo, hi, _ in self._buckets
-            ]
-            D_now = jnp.concatenate(parts, axis=0)
-        (
-            self._Vl, self._C, self._ring, self._Vagg_hist,
-            self._E, accs,
-        ) = self._lossy_core_j(
-            self._Vl, C0, D_now, self._ring, self._Vagg_hist,
-            Vstart_new, self._E, jnp.asarray(ctl["M_all"]),
-            jnp.asarray(ctl["eps"]),
-            jnp.asarray(ctl["Gm"]), jnp.asarray(ctl["cnt"]),
-            jnp.asarray(ctl["c2_mask"]), jnp.asarray(ctl["c2_src"]),
-            jnp.asarray(ctl["kidx"]), jnp.asarray(ctl["kmask"]),
-        )
+            else:
+                parts = [
+                    self._batched_deltas_keep(
+                        W[lo:hi],
+                        jnp.asarray(np.stack(xs[lo:hi])),
+                        jnp.asarray(np.stack(ys[lo:hi])),
+                    )
+                    for lo, hi, _ in self._buckets
+                ]
+                D_now = jnp.concatenate(parts, axis=0)
+            if pt.sync:
+                jax.block_until_ready(D_now)
+        with pt.phase("device_core"):
+            out = self._lossy_core_j(
+                self._Vl, C0, D_now, self._ring, self._Vagg_hist,
+                Vstart_new, self._E, jnp.asarray(ctl["msrc"]),
+                jnp.asarray(ctl["eps"]),
+                jnp.asarray(ctl["mmask"]), jnp.asarray(ctl["cnt"]),
+                jnp.asarray(ctl["c2_mask"]), jnp.asarray(ctl["c2_src"]),
+                jnp.asarray(ctl["kidx"]), jnp.asarray(ctl["kmask"]),
+            )
+            if pt.sync:
+                jax.block_until_ready(out)
+        met = None
+        if self.recorder is not None:
+            (
+                self._Vl, self._C, self._ring, self._Vagg_hist,
+                self._E, accs, met,
+            ) = out
+        else:
+            (
+                self._Vl, self._C, self._ring, self._Vagg_hist,
+                self._E, accs,
+            ) = out
         self._Vstart_hist = Vstart_new
         self.device_dispatches += 2 + len(self._buckets)
 
@@ -1153,6 +1372,8 @@ class VectorizedIPLSSimulation:
         self._bytes_total += ctl["nbytes"]
         metrics = self._metrics_entry(rnd, np.asarray(accs, np.float32))
         self.history.append(metrics)
+        if self.recorder is not None:
+            self._emit_row(rnd, ctl["r_vec"], ctl["eps64"], met)
         return metrics
 
     def _run_window_lossy(self, r0: int, W: int) -> None:
@@ -1162,16 +1383,20 @@ class VectorizedIPLSSimulation:
         fused pre+SGD+core body over them with the device state in the
         carry."""
         A, K = self.A, self.K
-        wf = _FateWindow(
-            self._fates, self._t, W, np.arange(A)[:, None], np.arange(K)[None, :],
-            self._rep_src_agent, self._rep_k, self._rep_dst_agent,
-        )
-        ctls = [self._control_round(r0 + w, wf) for w in range(W)]
-        Xw, Yw = [], []
-        for _ in range(W):
-            xs, ys = self._draw_batches()
-            Xw.append(xs)
-            Yw.append(ys)
+        pt = self._pt
+        with pt.phase("fate_draw"):
+            wf = _FateWindow(
+                self._fates, self._t, W, np.arange(A)[:, None], np.arange(K)[None, :],
+                self._rep_src_agent, self._rep_k, self._rep_dst_agent,
+            )
+        with pt.phase("control"):
+            ctls = [self._control_round(r0 + w, wf) for w in range(W)]
+        with pt.phase("batches"):
+            Xw, Yw = [], []
+            for _ in range(W):
+                xs, ys = self._draw_batches()
+                Xw.append(xs)
+                Yw.append(ys)
         Xs = tuple(
             jnp.asarray(np.stack([np.stack(Xw[w][lo:hi]) for w in range(W)]))
             for lo, hi, _ in self._buckets
@@ -1183,19 +1408,28 @@ class VectorizedIPLSSimulation:
         stack = lambda key: jnp.asarray(np.stack([c[key] for c in ctls]))
         des = jnp.asarray([self._do_eval(r0 + w) for w in range(W)])
         xs_all = (
-            Xs, Ys, stack("c0_mask"), stack("c0_src"), stack("M_all"),
-            stack("eps"), stack("Gm"), stack("cnt"), stack("c2_mask"),
+            Xs, Ys, stack("c0_mask"), stack("c0_src"), stack("msrc"),
+            stack("eps"), stack("mmask"), stack("cnt"), stack("c2_mask"),
             stack("c2_src"), stack("kidx"), stack("kmask"), des,
         )
-        carry, accs = self._scan_window_j(
-            self._Vl, self._C, self._ring, self._Vagg_hist,
-            self._Vstart_hist, self._E, xs_all,
-        )
+        with pt.phase("device_window"):
+            carry, ys = self._scan_window_j(
+                self._Vl, self._C, self._ring, self._Vagg_hist,
+                self._Vstart_hist, self._E, xs_all,
+            )
+            if pt.sync:
+                jax.block_until_ready(ys)
         (
             self._Vl, self._C, self._ring, self._Vagg_hist,
             self._Vstart_hist, self._E,
         ) = carry
         self.device_dispatches += 1
+        mets = None
+        if self.recorder is not None:
+            accs, mets = ys
+            mets = np.asarray(mets, np.float32)
+        else:
+            accs = ys
         accs = np.asarray(accs, np.float32)
         for w in range(W):
             c = ctls[w]
@@ -1203,6 +1437,8 @@ class VectorizedIPLSSimulation:
             self.messages_dropped += c["drops"]
             self._bytes_total += c["nbytes"]
             self.history.append(self._metrics_entry(r0 + w, accs[w]))
+            if self.recorder is not None:
+                self._emit_row(r0 + w, c["r_vec"], c["eps64"], mets[w])
 
     # -- one round ----------------------------------------------------------
     def _draw_batches(self):
@@ -1216,34 +1452,44 @@ class VectorizedIPLSSimulation:
     def run_round(self, rnd: int) -> dict:
         if self._lossy:
             return self._run_round_lossy(rnd)
-        xs, ys = self._draw_batches()
+        pt = self._pt
+        with pt.phase("batches"):
+            xs, ys = self._draw_batches()
         p = rnd % self._period
         p_prev = self._last_phase
         idx, mask, M, t_inst, t_eval = self._phase_tables[p]
         t_prev = self._phase_tables[p_prev][3]
-        if len(self._buckets) == 1:
-            self._V_pre, self._V_merged, self._eps, accs = self._fused_round(
-                self._V_pre, self._V_merged, self._eps,
-                jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
-                t_prev, idx, mask, M, t_eval,
-            )
-        else:
-            # heterogeneous batch sizes (at most two contiguous buckets from
-            # array_split): assemble weights once, SGD per bucket, then the
-            # shared aggregation/eval core
-            W = self._build_W_j(self._V_pre, self._V_merged, t_prev, self.A)
-            parts = [
-                self._batched_deltas_keep(
-                    W[lo:hi],
-                    jnp.asarray(np.stack(xs[lo:hi])),
-                    jnp.asarray(np.stack(ys[lo:hi])),
+        with pt.phase("device_round"):
+            if len(self._buckets) == 1:
+                out = self._fused_round(
+                    self._V_pre, self._V_merged, self._eps,
+                    jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+                    t_prev, idx, mask, M, t_eval,
                 )
-                for lo, hi, _ in self._buckets
-            ]
-            W2 = W - jnp.concatenate(parts, axis=0)
-            self._V_pre, self._V_merged, self._eps, accs = self._round_core_j(
-                self._V_merged, self._eps, W, W2, idx, mask, M, t_eval
-            )
+            else:
+                # heterogeneous batch sizes (at most two contiguous buckets
+                # from array_split): assemble weights once, SGD per bucket,
+                # then the shared aggregation/eval core
+                W = self._build_W_j(self._V_pre, self._V_merged, t_prev, self.A)
+                parts = [
+                    self._batched_deltas_keep(
+                        W[lo:hi],
+                        jnp.asarray(np.stack(xs[lo:hi])),
+                        jnp.asarray(np.stack(ys[lo:hi])),
+                    )
+                    for lo, hi, _ in self._buckets
+                ]
+                W2 = W - jnp.concatenate(parts, axis=0)
+                out = self._round_core_j(
+                    self._V_merged, self._eps, W, W2, idx, mask, M, t_eval
+                )
+            if pt.sync:
+                jax.block_until_ready(out)
+        met = None
+        if self.recorder is not None:
+            self._V_pre, self._V_merged, self._eps, accs, met = out
+        else:
+            self._V_pre, self._V_merged, self._eps, accs = out
         self.device_dispatches += 1 if len(self._buckets) == 1 else 2 + len(self._buckets)
         self._last_phase = p
         accs = np.asarray(accs, np.float32)
@@ -1251,6 +1497,8 @@ class VectorizedIPLSSimulation:
         self._perfect_traffic(rnd)
         metrics = self._metrics_entry(rnd, accs)
         self.history.append(metrics)
+        if self.recorder is not None:
+            self._emit_perfect(rnd, met)
         return metrics
 
     def _perfect_traffic(self, rnd: int) -> None:
@@ -1262,6 +1510,53 @@ class VectorizedIPLSSimulation:
         self.messages_sent += self._round_msgs + (
             self._round0_fetch_msgs if rnd == 0 else 0
         )
+
+    def _emit_row(self, rnd: int, contrib, eps, met) -> None:
+        """The engine's single telemetry emission site: one schema-ordered
+        finish_round per round, from the device aux metrics + control-plane
+        snapshots. Shapes/float paths mirror the scalar engine exactly
+        (byte-identical rows; tests/test_telemetry.py)."""
+        m = np.asarray(met, np.float32)
+        self.recorder.finish_round(
+            round=rnd,
+            active=self.A,
+            contrib=[int(x) for x in contrib],
+            eps=[float(x) for x in eps],
+            delta_normsq=float(m[0]),
+            value_normsq=float(m[1]),
+            accs=self._last_accs,
+            bytes_total=self._bytes_total,
+            msgs_total=self.messages_sent,
+            drops_total=self.messages_dropped,
+        )
+
+    def _emit_perfect(self, rnd: int, met) -> None:
+        """PERFECT-path telemetry: the closed-form traffic split by channel
+        (everything delivered, delay 0; replica publishes fan out rho_k-1
+        ways), plus the host-f64 eps replay of the scalar recursion."""
+        rec = self.recorder
+        if rnd == 0 and self._tel_r0_fetch_n:
+            n = self._tel_r0_fetch_n
+            rec.on_channel(rnd, "fetch", n, 16 * n, 0)
+            rec.on_delivered(rnd, 0, n)
+            rec.on_channel(rnd, "fetch_reply", n, self._tel_r0_fetch_rep_bytes, 0)
+            rec.on_delivered(rnd, 0, n)
+        rec.on_channel(rnd, "update", self._tel_upd_msgs, self._tel_upd_bytes, 0)
+        rec.on_delivered(rnd, 0, self._tel_upd_msgs)
+        rec.on_channel(
+            rnd, "update_reply", self._tel_upd_msgs, self._tel_upd_bytes, 0
+        )
+        rec.on_delivered(rnd, 0, self._tel_upd_msgs)
+        if self._tel_rep_msgs:
+            rec.on_channel(
+                rnd, "replica", self._tel_rep_msgs, self._tel_rep_bytes, 0
+            )
+            rec.on_delivered(rnd, 0, self._tel_rep_deliv)
+        r = self._tel_r[rnd % self._period]
+        self._tel_eps64 = (
+            self.cfg.alpha * self._tel_eps64 + (1.0 - self.cfg.alpha) / r
+        )
+        self._emit_row(rnd, r, self._tel_eps64, met)
 
     def _do_eval(self, rnd: int) -> bool:
         """Scanned-mode eval gate: every `eval_cadence`-th round plus the
@@ -1296,11 +1591,13 @@ class VectorizedIPLSSimulation:
         # pre-draw the whole window's batches through the trainers' rng
         # streams — round-major order, so the streams advance exactly as in
         # the unscanned path
-        Xw, Yw = [], []
-        for _ in range(W):
-            xs, ys = self._draw_batches()
-            Xw.append(xs)
-            Yw.append(ys)
+        pt = self._pt
+        with pt.phase("batches"):
+            Xw, Yw = [], []
+            for _ in range(W):
+                xs, ys = self._draw_batches()
+                Xw.append(xs)
+                Yw.append(ys)
         Xs = tuple(
             jnp.asarray(np.stack([np.stack(Xw[w][lo:hi]) for w in range(W)]))
             for lo, hi, _ in self._buckets
@@ -1327,15 +1624,26 @@ class VectorizedIPLSSimulation:
             jnp.asarray(np.stack(mask_l)), jnp.asarray(np.stack(M_l)),
             jnp.asarray(np.stack(t_eval_l)), jnp.asarray(np.asarray(de_l, bool)),
         )
-        self._V_pre, self._V_merged, self._eps, accs = self._scan_window_j(
-            self._V_pre, self._V_merged, self._eps, xs_all
-        )
+        with pt.phase("device_window"):
+            out = self._scan_window_j(
+                self._V_pre, self._V_merged, self._eps, xs_all
+            )
+            if pt.sync:
+                jax.block_until_ready(out)
+        mets = None
+        if self.recorder is not None:
+            self._V_pre, self._V_merged, self._eps, accs, mets = out
+            mets = np.asarray(mets, np.float32)
+        else:
+            self._V_pre, self._V_merged, self._eps, accs = out
         self.device_dispatches += 1
         self._last_phase = prev
         accs = np.asarray(accs, np.float32)
         for w in range(W):
             self._perfect_traffic(r0 + w)
             self.history.append(self._metrics_entry(r0 + w, accs[w]))
+            if self.recorder is not None:
+                self._emit_perfect(r0 + w, mets[w])
 
     def run_window(self, start_rnd: int, window: int) -> List[dict]:
         """Run `window` consecutive rounds as ONE lax.scan-driven device

@@ -1,0 +1,28 @@
+"""Observability for the IPLS reproduction: structured per-round metrics,
+protocol event traces, and per-phase wall timing. Zero overhead when
+disabled — engines hold ``NULL_TIMER`` and skip every tap, and the jitted
+programs are unchanged (no extra outputs in the jaxpr).
+"""
+from repro.telemetry.recorder import MetricsRecorder
+from repro.telemetry.schema import (
+    CHANNELS,
+    FINISH_KEYS,
+    ROW_KEYS,
+    SCHEMA_VERSION,
+    TELEMETRY_SCHEMA,
+)
+from repro.telemetry.timing import NULL_TIMER, PhaseTimer, host_metadata
+from repro.telemetry.trace import TraceWriter
+
+__all__ = [
+    "MetricsRecorder",
+    "TraceWriter",
+    "PhaseTimer",
+    "NULL_TIMER",
+    "host_metadata",
+    "SCHEMA_VERSION",
+    "CHANNELS",
+    "FINISH_KEYS",
+    "ROW_KEYS",
+    "TELEMETRY_SCHEMA",
+]

@@ -1,0 +1,37 @@
+"""Device-side metric math shared by all engines.
+
+The equivalence contract (scalar == vectorized == scanned, byte for byte)
+extends to the f32 norm metrics, so the REDUCTION must be the same XLA
+program everywhere: the fused engines inline ``metric_pair`` into their
+device calls as an auxiliary output, while the scalar engine calls the
+standalone jitted ``host_normsq`` on bitwise-identical planes. On the CPU
+backend ``jnp.sum(x*x)`` lowers to the same deterministic loop-order
+reduction in both contexts (verified empirically; asserted by the
+equivalence tests every run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normsq(x):
+    """Sum of squares, f32 in / f32 scalar out. Pure — safe to inline into
+    any jitted engine body."""
+    return jnp.sum(x * x)
+
+
+def metric_pair(delta_plane, value_plane):
+    """The per-round (delta_normsq, value_normsq) auxiliary output of the
+    fused engines, as one (2,) f32 vector."""
+    return jnp.stack([normsq(delta_plane), normsq(value_plane)])
+
+
+_normsq_j = jax.jit(normsq)
+
+
+def host_normsq(x: np.ndarray) -> float:
+    """Scalar-engine entry point: the same jitted reduction, value pulled
+    back to a python float (exact f32 round-trip)."""
+    return float(np.asarray(_normsq_j(jnp.asarray(x, jnp.float32))))

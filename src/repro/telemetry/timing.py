@@ -1,0 +1,86 @@
+"""Per-phase wall timers: dispatch-level attribution for the round engines.
+
+``PhaseTimer.phase(name)`` is a context manager accumulating count/seconds
+per phase; when a ``TraceWriter`` is attached every phase also lands as a
+Chrome trace "X" (complete) event on the host-wall-clock track. The
+``NULL_TIMER`` singleton is what engines hold when telemetry is disabled —
+its ``phase()`` is a shared no-op context manager, so the disabled-path
+cost is one attribute lookup per phase.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+
+class PhaseTimer:
+    """Accumulates wall seconds per named phase.
+
+    ``sync`` tells engines to ``jax.block_until_ready`` inside device
+    phases so async dispatch cannot leak timed work across phases — only
+    honest when a timer is actually attached.
+    """
+
+    sync = True
+
+    def __init__(self, trace=None):
+        self.trace = trace
+        self.totals: Dict[str, list] = {}  # name -> [count, seconds]
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            ent = self.totals.setdefault(name, [0, 0.0])
+            ent[0] += 1
+            ent[1] += dt
+            if self.trace is not None:
+                self.trace.host_span(name, t0, dt)
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {
+            name: {"count": c, "total_s": s, "mean_s": s / max(c, 1)}
+            for name, (c, s) in sorted(self.totals.items())
+        }
+
+
+class _NullTimer:
+    sync = False
+    totals: Dict[str, list] = {}
+
+    @contextmanager
+    def phase(self, name: str):
+        yield
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {}
+
+
+NULL_TIMER = _NullTimer()
+
+
+def host_metadata(timestamp: Optional[str] = None) -> Dict[str, object]:
+    """Environment stamp for benchmark artifacts (BENCH_rounds.json):
+    the context that makes cross-machine perf numbers comparable. The
+    timestamp is passed in by the runner (benchmarks/run.py) so library
+    code stays clock-free."""
+    import os
+    import platform
+    import sys
+
+    import jax
+    import numpy as np
+
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "numpy_version": np.__version__,
+        "timestamp": timestamp,
+    }

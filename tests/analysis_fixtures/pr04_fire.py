@@ -1,0 +1,21 @@
+"""PR04 fire: telemetry emission sites that drift from the shared metric
+schema — a misspelled/unknown finish_round key (which also makes the row
+incomplete) and an on_channel call naming a channel no engine declares."""
+
+
+def emit(recorder, rnd, n_active, row):
+    # 'activ' is not a schema key, and 'active' is therefore missing
+    recorder.finish_round(
+        round=rnd,
+        activ=n_active,
+        contrib=row["contrib"],
+        eps=row["eps"],
+        delta_normsq=row["dn"],
+        value_normsq=row["vn"],
+        accs=row["accs"],
+        bytes_total=row["b"],
+        msgs_total=row["m"],
+        drops_total=row["d"],
+    )
+    # 'gossip' is not in telemetry.schema.CHANNELS
+    recorder.on_channel(rnd, "gossip", 3, 1200, 0)

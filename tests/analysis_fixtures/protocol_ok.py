@@ -23,6 +23,23 @@ class Engine:
         return msg
 
 
+def emit(recorder, rnd, n_active, row):
+    # a schema-complete, keyword-only emission with schema channel names
+    recorder.on_channel(rnd, "update", row["m"], row["b"], 0)
+    recorder.finish_round(
+        round=rnd,
+        active=n_active,
+        contrib=row["contrib"],
+        eps=row["eps"],
+        delta_normsq=row["dn"],
+        value_normsq=row["vn"],
+        accs=row["accs"],
+        bytes_total=row["b"],
+        msgs_total=row["m"],
+        drops_total=row["d"],
+    )
+
+
 def account(net, topic, seg, n_need, shards):
     # dtype-derived wire bytes and header-sized constants are all fine
     net.publish(topic, 0, seg, nbytes=seg.nbytes)

@@ -40,6 +40,7 @@ FIRE_CASES = {
     "pr01_fire.py": "PR01",
     "pr02_fire.py": "PR02",
     "pr03_fire.py": "PR03",
+    "pr04_fire.py": "PR04",
 }
 
 OK_CASES = [
@@ -130,6 +131,21 @@ def test_symmetry_table_matches_real_engines():
         text = path.read_text()
         for fn in funcs:
             assert f"def {fn}(" in text, f"{suffix}: declared '{fn}' not found"
+    for suffix, fn in rules_protocol.EMITTER_FUNCS.items():
+        path = REPO / "src" / "repro" / suffix
+        assert path.exists(), f"EMITTER_FUNCS references missing file {suffix}"
+        assert f"def {fn}(" in path.read_text(), (
+            f"{suffix}: declared emitter '{fn}' not found"
+        )
+
+
+def test_pr04_schema_mirror_matches_live_schema():
+    # PR04 carries a hardcoded copy of the telemetry schema so the analyzer
+    # stays importable without the telemetry package; this pins the mirror
+    from repro.telemetry import schema
+
+    assert rules_protocol.METRIC_FINISH_KEYS == schema.FINISH_KEYS
+    assert rules_protocol.METRIC_CHANNELS == schema.CHANNELS
 
 
 def _run_cli(*args):
