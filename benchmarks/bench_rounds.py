@@ -228,6 +228,54 @@ def run(
             )
         )
 
+    # churn re-snapshot overhead: the scanned LOSSY loop with 3 membership
+    # events over 30 rounds vs the identical run without churn. Event
+    # rounds replay on the embedded scalar oracle and every span boundary
+    # re-snapshots (and re-jits) the dense planes, so the delta between
+    # the two runs, split across the events, is the per-event boundary
+    # cost. Both runs time end-to-end including jit (the re-jit IS the
+    # overhead being measured; the initial compile appears in both and
+    # cancels in the difference).
+    churn_rounds = 30
+    churn = {5: [(1, "offline")], 14: [(1, "online")], 22: [(0, "crash")]}
+    churn_stats = {}
+    for label, sched in (("churn", churn), ("base", None)):
+        cfg = SimConfig(
+            num_agents=n, num_partitions=10, pi=2, rho=2,
+            local_iters=2, batch_size=64, eval_agents=4,
+            conditions=LOSSY, churn=sched, engine="vectorized",
+            scan_rounds=SCAN_W, rounds=churn_rounds,
+        )
+        sim = make_simulation(cfg, shards, x_te, y_te)
+        t0 = time.perf_counter()
+        sim.run()
+        _sync(sim)
+        churn_stats[label] = (
+            time.perf_counter() - t0,
+            sim.device_dispatches / churn_rounds,
+        )
+    t_churn, dpr_churn = churn_stats["churn"]
+    t_base, dpr_base = churn_stats["base"]
+    resnap_s = (t_churn - t_base) / len(churn)
+    results[f"churn_scan{SCAN_W}_lossy_n{n}"] = {
+        "rounds": churn_rounds,
+        "events": len(churn),
+        "seconds_per_round": t_churn / churn_rounds,
+        "baseline_seconds_per_round": t_base / churn_rounds,
+        "resnapshot_s_per_event": resnap_s,
+        "dispatches_per_round": dpr_churn,
+        "baseline_dispatches_per_round": dpr_base,
+    }
+    rows.append(
+        csv_row(
+            f"rounds_churn_scan{SCAN_W}_lossy_n{n}",
+            (t_churn / churn_rounds) * 1e6,
+            f"rounds_per_s={churn_rounds/t_churn:.2f};"
+            f"resnapshot_s_per_event={resnap_s:.3f};"
+            f"dispatches_per_round={dpr_churn:.3f}",
+        )
+    )
+
     # the static-analysis gate's own cost, kept visible in the perf
     # trajectory next to the numbers it guards
     repo = Path(__file__).resolve().parents[1]

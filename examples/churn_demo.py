@@ -5,9 +5,12 @@ training continues (paper §2.2 Terminate + Fig 3b).
     PYTHONPATH=src python examples/churn_demo.py --engine vectorized --scan-rounds 7
     PYTHONPATH=src python examples/churn_demo.py --metrics-out churn.jsonl --trace-out churn.trace.json
 
-The churn schedule needs the scalar engine (the vectorized engine assumes
-fixed membership); with --engine vectorized the demo drops churn and runs
-the same lossy-network training fused, optionally lax.scan-windowed.
+Both engines run the same membership-event schedule: the vectorized engine
+replays each event round on its embedded scalar oracle and re-snapshots the
+dense planes at the boundary (docs/ENGINE.md "Churn re-snapshot"), so with
+--engine vectorized the demo runs the real schedule fused — optionally
+lax.scan-windowed — and then re-runs it on the scalar engine to assert the
+final accuracies match.
 """
 import argparse
 
@@ -19,7 +22,8 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--engine", default="scalar", choices=["scalar", "vectorized"],
-        help="round engine; vectorized drops the churn schedule (fixed membership)",
+        help="round engine; vectorized runs the same churn schedule via "
+        "event-boundary re-snapshot and is verified against the scalar oracle",
     )
     ap.add_argument(
         "--scan-rounds", type=int, default=0,
@@ -50,10 +54,6 @@ def main():
         7: [(5, "online")],               # agent 5 rejoins (with memory)
         9: [(3, "crash")],                # agent 3 fails without handoff
     }
-    if args.engine == "vectorized":
-        print("note: vectorized engine assumes fixed membership — running the "
-              "lossy-network schedule without churn events\n")
-        churn = {}
     cfg = SimConfig(
         num_agents=6, num_partitions=12, pi=3, rho=2, rounds=14,
         local_iters=8, churn=churn, memory=True, conditions=LOSSY,
@@ -68,11 +68,24 @@ def main():
             f"round {rnd:2d} active={m['active']} acc={m['acc_mean']:.4f} "
             f"(+/-{m['acc_std']:.4f}) churn=[{events}]"
         )
-    if args.engine == "scalar":
-        assert sim.table.coverage(), "partition coverage lost!"
-        print("\npartition coverage preserved through leave/crash/rejoin ✓")
-    else:
-        print(f"\ndevice dispatches: {sim.device_dispatches} for {cfg.rounds} rounds")
+    assert sim.table.coverage(), "partition coverage lost!"
+    print("\npartition coverage preserved through leave/crash/rejoin ✓")
+    if args.engine == "vectorized":
+        print(f"device dispatches: {sim.device_dispatches} for {cfg.rounds} rounds")
+        # same schedule on the scalar oracle: the re-snapshot path must land
+        # on the identical final accuracy (weights match to float noise)
+        import dataclasses
+
+        ref = make_simulation(
+            dataclasses.replace(
+                cfg, engine="scalar", scan_rounds=0, telemetry=False, trace=False
+            ),
+            shards, x_te, y_te,
+        )
+        ref_acc = ref.run()[-1]["acc_mean"]
+        acc = sim.history[-1]["acc_mean"]
+        assert abs(acc - ref_acc) < 1e-6, (acc, ref_acc)
+        print(f"scalar-oracle check: final acc {acc:.4f} == {ref_acc:.4f} ✓")
     if args.metrics_out:
         sim.recorder.write_jsonl(
             args.metrics_out,

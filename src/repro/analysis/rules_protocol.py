@@ -54,11 +54,17 @@ SYMMETRY: Dict[str, Dict[str, Set[str]]] = {
         "send": {"messages_sent", "messages_dropped", "bytes_sent"},
         "tick": {"messages_dropped", "bytes_recv"},
     },
-    # vectorized engine: per-round bulk accounting from the device counters
+    # vectorized engine: per-round bulk accounting from the device counters,
+    # plus the churn re-snapshot boundary crossings that move pubsub state
+    # between the oracle and the dense planes (docs/ENGINE.md "Churn
+    # re-snapshot") — they mirror the scalar tick's delivery accounting
     "fl/vectorized.py": {
         "_run_round_lossy": {"messages_sent", "messages_dropped", "_bytes_total"},
         "_run_window_lossy": {"messages_sent", "messages_dropped", "_bytes_total"},
         "_perfect_traffic": {"messages_sent", "_bytes_total"},
+        "_init_lossy": {"bytes_recv"},
+        "_harvest_pubsub": {"bytes_recv"},
+        "_device_to_scalar": {"bytes_sent", "bytes_recv"},
     },
 }
 

@@ -24,7 +24,7 @@ benchmark (paper §3 'the data sent and received by each agent is constant').
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -323,6 +323,48 @@ class IPLSAgent:
             elif k in self.cache:
                 w[offsets[k] : offsets[k] + self.spec.sizes[k]] = self.cache[k]
         return w
+
+    # -- Snapshot hooks ----------------------------------------------------------
+    # Used by the vectorized engine's churn re-snapshot (fl/vectorized.py):
+    # at a membership-event boundary the dense device planes are written back
+    # into the scalar agents (import), the event round replays on the scalar
+    # oracle, and the next fused span harvests the updated state (export).
+    def export_state(self) -> dict:
+        """Protocol state as plain dicts of arrays/scalars: owned partition
+        values with their (eps, version), the cached global parts, and the
+        int8 error-feedback residuals. Values are the live arrays, not
+        copies — callers snapshot into dense planes immediately."""
+        return {
+            "owned": {
+                k: (st.value, st.eps, st.version) for k, st in self.owned.items()
+            },
+            "cache": dict(self.cache),
+            "delta_err": dict(self._delta_err),
+        }
+
+    def import_state(
+        self,
+        owned: Dict[int, Tuple[np.ndarray, float, int]],
+        cache: Dict[int, np.ndarray],
+        delta_err: Optional[Dict[int, np.ndarray]] = None,
+    ) -> None:
+        """Overwrite protocol state from dense-plane values. Only partitions
+        this agent currently owns (per the shared table) are accepted; the
+        pending delta buffers reset (the caller re-injects in-flight messages
+        through the pubsub instead)."""
+        for k, (val, eps, ver) in owned.items():
+            st = self.owned.get(k)
+            if st is None:
+                continue
+            st.value = np.asarray(val, np.float32).copy()
+            st.eps = float(eps)
+            st.version = int(ver)
+            st.pending_n = 0
+        self.cache = {k: np.asarray(v, np.float32).copy() for k, v in cache.items()}
+        if delta_err is not None:
+            self._delta_err = {
+                k: np.asarray(v, np.float32).copy() for k, v in delta_err.items()
+            }
 
     # -- Terminate ---------------------------------------------------------------
     def terminate(self) -> None:

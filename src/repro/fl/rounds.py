@@ -133,12 +133,19 @@ class SimConfig:
     seed: int = 0
     eval_agents: int = 0  # evaluate at most this many agents per round (0 = all)
     conditions: NetworkConditions = PERFECT
-    # churn: map round -> list of (agent_id, "offline"|"online"|"leave"|"crash"|"join")
+    # churn: map round -> list of (agent_id, action) events applied at the
+    # START of that round, action in "offline"|"online"|"leave"|"crash"|"join".
+    # Same-round events apply in a DETERMINISTIC order regardless of list
+    # order: leave/crash first, then join, then offline/online (stable within
+    # each class). So {r: [(3, "join"), (3, "crash")]} always crashes the
+    # pre-existing agent 3 and then admits a fresh one — it never resurrects
+    # crashed state — and both engines apply the identical order.
     churn: Optional[Dict[int, List[Tuple[int, str]]]] = None
     memory: bool = True  # False = 'memoryless training' (paper Fig 3b)
-    # round engine: "scalar" (per-agent loops; full churn support) or
-    # "vectorized" (whole-round batched device calls; any NetworkConditions,
-    # fixed membership only — see fl/vectorized.py and docs/ENGINE.md)
+    # round engine: "scalar" (per-agent loops) or "vectorized" (whole-round
+    # batched device calls; any NetworkConditions, churn included — event
+    # rounds replay on the embedded scalar oracle and the dense planes are
+    # re-snapshotted at the boundary; see fl/vectorized.py and docs/ENGINE.md)
     engine: str = "scalar"
     # multi-round fusion (vectorized engine only): 0 = one device call per
     # round; W >= 1 = run windows of W rounds as ONE lax.scan-driven device
@@ -186,7 +193,10 @@ def make_simulation(cfg: SimConfig, shards, x_test, y_test):
     (property-tested in tests/test_vectorized.py — weights to float
     tolerance, traffic counters exactly); the vectorized engine batches
     each round into a handful of device calls and is the one to use at
-    scale. Churn schedules still require the scalar engine.
+    scale. Churn schedules run on both engines: the vectorized engine
+    replays membership-event rounds through the scalar oracle and
+    re-snapshots its dense planes at the event boundaries (docs/ENGINE.md
+    "Churn re-snapshot").
     """
     if cfg.engine == "vectorized":
         from repro.fl.vectorized import VectorizedIPLSSimulation
@@ -226,6 +236,10 @@ class IPLSSimulation:
             self.trainers[a] = LocalTrainer(
                 a, x, y, cfg.lr, cfg.local_iters, cfg.batch_size, cfg.seed
             )
+        # joiner shard bookkeeping (see _next_free_shard): shard index backing
+        # each trainer created from self._shards, and the round-robin cursor
+        self._trainer_shard: Dict[int, int] = {a: a for a in range(cfg.num_agents)}
+        self._join_rr = 0
         self.history: List[dict] = []
         # observability: attached AFTER init so the join/bootstrap traffic is
         # excluded from the per-round streams in both engines identically
@@ -250,10 +264,21 @@ class IPLSSimulation:
             )
 
     # -- churn handling -----------------------------------------------------
+    # Same-round events are applied in a deterministic class order (see the
+    # SimConfig.churn comment): departures first, then joins, then
+    # offline/online toggles; the sort is stable so same-class events keep
+    # their schedule order. The vectorized engine replays event rounds
+    # through this same method, so both engines agree by construction.
+    _CHURN_ORDER = {"leave": 0, "crash": 0, "join": 1, "offline": 2, "online": 2}
+
     def _apply_churn(self, rnd: int) -> None:
         if not self.cfg.churn:
             return
-        for agent_id, action in self.cfg.churn.get(rnd, []):
+        events = sorted(
+            self.cfg.churn.get(rnd, []),
+            key=lambda ev: self._CHURN_ORDER.get(ev[1], 3),
+        )
+        for agent_id, action in events:
             if action == "offline":
                 self.net.pubsub.set_offline(agent_id, True)
             elif action == "online":
@@ -280,11 +305,35 @@ class IPLSSimulation:
                     if self.cfg.join_shard is not None:
                         x, y = self.cfg.join_shard(agent_id)
                     else:
-                        x, y = self._shards[agent_id % len(self._shards)]
+                        shard_idx = self._next_free_shard(agent_id)
+                        self._trainer_shard[agent_id] = shard_idx
+                        x, y = self._shards[shard_idx]
                     self.trainers[agent_id] = LocalTrainer(
                         agent_id, x, y, self.cfg.lr, self.cfg.local_iters,
                         self.cfg.batch_size, self.cfg.seed,
                     )
+
+    def _next_free_shard(self, agent_id: int) -> int:
+        """Pick a data shard for a joiner: round-robin over shards not held
+        by any live agent's trainer, so a joiner whose id aliases an active
+        agent's shard index does not double-count that data in the average.
+        Falls back to ``agent_id % len(shards)`` only when every shard is
+        taken."""
+        used = {
+            self._trainer_shard[a]
+            for a, ag in self.agents.items()
+            if ag.live and a != agent_id and a in self._trainer_shard
+        }
+        n = len(self._shards)
+        free = [i for i in range(n) if i not in used]
+        if not free:
+            return agent_id % n
+        for _ in range(n):
+            idx = self._join_rr % n
+            self._join_rr += 1
+            if idx in free:
+                return idx
+        return free[0]
 
     def _live_online(self) -> List[int]:
         return [

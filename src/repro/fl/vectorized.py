@@ -46,7 +46,16 @@ state machine (pure integer/boolean numpy) mirrors the scalar fetch
 warm-up protocol so `bytes_total` / `messages_dropped` match the pubsub
 counters exactly. See docs/ENGINE.md.
 
-Scope: fixed membership (churn schedules still require the scalar oracle).
+Churn: membership schedules run here too, via event-boundary re-snapshot.
+Rounds between membership events run fused; each event round replays on
+the embedded scalar oracle (whose `_apply_churn` implements the
+leave/crash/join handoff rules), and every membership-dependent dense
+structure — instance tables, `_slot_inst`/`_widx`, the value/cache/ring
+planes, contribution and merge layouts, trainer buckets — is rebuilt from
+the scalar state at the boundary. In-flight protocol messages cross the
+boundary in both directions: harvested from the pubsub into the queue
+rings and a span-constant mail plane on entry, re-injected as pubsub
+messages on exit. See docs/ENGINE.md "Churn re-snapshot".
 Traffic accounting is computed in closed form (PERFECT) or by the mask
 stream (LOSSY) and matches the scalar engine's pubsub counters exactly.
 
@@ -80,6 +89,15 @@ from repro.telemetry.device import metric_pair
 # cache-event value sources (see _run_round_lossy)
 _KIND_START = 0  # holder value at the start of the serve round (fetch reply)
 _KIND_AGG = 1  # holder value after aggregation, pre-merge (UpdateModel reply)
+_KIND_MAIL = 2  # harvested in-flight reply payload (span-constant mail plane)
+
+
+class _HarvestDeferred(Exception):
+    """A span-boundary harvest met an in-flight message shape the dense
+    planes cannot represent (possible only when max_delay_rounds exceeds
+    one round of ticks, e.g. a straggler whose sender has since left).
+    The caller replays one more round on the scalar oracle and retries —
+    stragglers drain within max_delay, so the retry converges."""
 
 
 class _FateWindow:
@@ -130,11 +148,6 @@ class VectorizedIPLSSimulation:
         self._use_kernel = (
             jax.default_backend() == "tpu" if use_kernel is None else use_kernel
         )
-        if cfg.churn:
-            raise ValueError(
-                "engine='vectorized' does not support churn schedules; "
-                "use the scalar engine"
-            )
         # int8 wire mode: route through the general event-driven path even
         # under PERFECT conditions — quantized replica consensus makes each
         # holder's merged value differ (raw self + qdq of the others), which
@@ -143,11 +156,15 @@ class VectorizedIPLSSimulation:
         # reproduces the scalar engine exactly
         self._int8 = getattr(cfg, "wire_dtype", "f32") == "int8"
         # imperfect connectivity runs batched through the mask-stream path
-        # (same gate as the scalar engine's keyed-fates installation)
+        # (same gate as the scalar engine's keyed-fates installation); churn
+        # routes there too — membership-event rounds replay on the scalar
+        # oracle and the spans between re-snapshot, which only the
+        # event-driven path's queue rings can represent
         self._lossy = (
             cfg.conditions.loss_prob > 0
             or cfg.conditions.delay_prob > 0
             or self._int8
+            or bool(cfg.churn)
         )
         self.cfg = cfg
         # multi-round fusion: run() executes windows of `scan_rounds` rounds
@@ -182,6 +199,15 @@ class VectorizedIPLSSimulation:
         offsets = np.asarray(self.spec.offsets(), np.int64)
         N = self.spec.total
         self.A, self.K, self.N = A, K, N
+        # membership rows: live agents in scalar `active`-iteration (dict)
+        # order; full fixed membership outside the churn path. The embedded
+        # scalar sim stays attached as the churn replay oracle.
+        self._seed = seed_sim
+        self._ids: List[int] = list(range(A))
+        self._n_act = A
+        self._on_device = True
+        self._replay: List[int] = []
+        self._replay_set: frozenset = frozenset()
 
         # ---- instance plane: one row per (partition, replica-slot) --------
         holders: List[List[int]] = [self.table.holders_of(k) for k in range(K)]
@@ -250,6 +276,7 @@ class VectorizedIPLSSimulation:
         # draw_batch() keeps both engines' SGD inputs identical by
         # construction ----
         self._trainers = [seed_sim.trainers[a] for a in range(A)]
+        self._act_trainers = self._trainers
         bs = [min(cfg.batch_size, len(shards[a][0])) for a in range(A)]
         # contiguous buckets of equal batch size (array_split shard sizes
         # differ by at most one, so there are at most two)
@@ -266,7 +293,7 @@ class VectorizedIPLSSimulation:
         self._eval_idx = np.asarray(eval_subset(list(range(A)), cfg.eval_agents), np.int32)
 
         if self._lossy:
-            self._init_lossy(seed_sim, V_pre, eps)
+            self._init_lossy(seed_sim)
             return
 
         # round-0 warm-up traffic (agents fetch partitions absent from both
@@ -614,7 +641,7 @@ class VectorizedIPLSSimulation:
         ]
 
     # ===================== LOSSY (mask-stream) path ========================
-    def _init_lossy(self, seed_sim, V_pre, eps):
+    def _init_lossy(self, seed_sim):
         """State for the lossy-network batched path.
 
         The protocol's per-parameter math stays in a handful of jitted
@@ -624,27 +651,30 @@ class VectorizedIPLSSimulation:
         machine, and event queues for in-flight serves/arrivals/merges/
         cache updates. Delayed deltas and the value tables late messages
         read from live in small device-side history rings.
+
+        Only membership-independent constants live here; everything shaped
+        by the current membership is built by `_snapshot_from_scalar`, which
+        also re-runs after every replayed membership-event round.
         """
         from repro.fl.rounds import TICKS_PER_ROUND
 
         cfg = self.cfg
-        A, K, S = self.A, self.K, self.S
-        sizes, rho = self._sizes, self._rho
-        self._ticks = TICKS_PER_ROUND
         cond = cfg.conditions
+        self._ticks = TICKS_PER_ROUND
         # delays are in tick units; a message delayed d ticks lands
         # ceil(d / TICKS) rounds late at its drain point
         self._Lu = (
             -(-cond.max_delay_rounds // TICKS_PER_ROUND) if cond.delay_prob > 0 else 0
         )
         self._HD = self._Lu + 1  # history ring depth (value ages 0..Lu)
-        # sequential-reduction capacities for the ordered gather paths:
-        # each other replica of a partition has at most one value in flight
-        # per send round (ages 0..Lu), and each non-owner at most one
-        # UpdateModel delta per in-flight send round
-        self._mw = max(1, (int(rho.max()) - 1) * self._HD) if len(rho) else 1
-        self._cw = 1 + self._HD * (A - 1)
-        # int8 under PERFECT conditions also runs this path; the scalar
+        # in-flight event queues: bounded-depth rings indexed by
+        # (consuming round) mod depth. Nothing stays in flight longer than
+        # Lu rounds (delays are capped), so depth Lu+1 suffices; every slot
+        # is drained exactly once per depth rounds. The window runner stacks
+        # each round's drained events into dense per-round tensors that ride
+        # the lax.scan as xs (the device state itself lives in the carry).
+        self._qdepth = self._Lu + 1
+        # int8/churn under PERFECT conditions also run this path; the scalar
         # engine never installed a fate stream there, so build one — every
         # draw degenerates to (delivered, delay 0), i.e. default delivery
         if seed_sim.fates is None:
@@ -653,101 +683,98 @@ class VectorizedIPLSSimulation:
             self._fates = MessageFates(cond, cfg.seed)
         else:
             self._fates = seed_sim.fates
-
-        # per-round send counts/bytes are closed-form: loss only affects
-        # delivery, never whether an UpdateModel/replica message is sent
-        self._upd_msgs = int(np.sum(A - rho))
-        self._upd_bytes = int(np.sum((A - rho) * self._wsizes))
-        pub_inst = np.nonzero(rho[self._inst_k] > 1)[0]
-        self._pub_msgs = int(len(pub_inst))
-        self._pub_bytes = int(np.sum(self._wsizes[self._inst_k[pub_inst]]))
-        # ordered (source -> destination) instance pairs for replica sync
-        src, dst = [], []
-        for k in range(K):
-            insts = np.nonzero(self._inst_k == k)[0]
-            if len(insts) <= 1:
-                continue
-            for i in insts:
-                for j in insts:
-                    if i != j:
-                        src.append(int(i))
-                        dst.append(int(j))
-        self._rep_src = np.asarray(src, np.int32)
-        self._rep_dst = np.asarray(dst, np.int32)
-        self._rep_src_agent = self._inst_owner[self._rep_src]
-        self._rep_dst_agent = self._inst_owner[self._rep_dst]
-        self._rep_k = self._inst_k[self._rep_src]
-
-        # W-assembly index into concat([V (K_inst rows), C (A*K rows)]):
-        # owners read their own instance value, everyone else their cache row
-        widx = np.zeros((A, K), np.int32)
-        inst_of = {
-            (int(self._inst_owner[i]), int(self._inst_k[i])): i
-            for i in range(self.K_inst)
-        }
-        for a in range(A):
-            for k in range(K):
-                widx[a, k] = inst_of.get((a, k), self.K_inst + a * K + k)
-        self._widx = widx
-
-        # explicit cache plane + fetch warm-up state, seeded from the scalar
-        # init (donor caches left behind by partition transfers). A slot
-        # stays at its last successfully delivered value — exactly the
-        # scalar cache-staleness semantics under loss.
-        C = np.zeros((A, K, S), np.float32)
-        has = np.zeros((A, K), bool)
-        for a in range(A):
-            for k, val in seed_sim.agents[a].cache.items():
-                C[a, k, : sizes[k]] = val
-                has[a, k] = True
-        self._has_cache = has
-        self._C = jnp.asarray(C)
-        self._Vl = jnp.asarray(V_pre)
-        # eps lives on the HOST in float64: the scalar engine's per-partition
-        # eps is a python float, and its recursion must be replayed in the
-        # same precision (f32 replay drifts by an ULP, which the int8 codec
-        # amplifies to a full quantization step). Seed from the scalar
-        # agents' exact values, not the f32 snapshot.
-        self._eps64 = np.asarray(
-            [
-                seed_sim.agents[int(self._inst_owner[i])].owned[int(self._inst_k[i])].eps
-                for i in range(self.K_inst)
-            ],
-            np.float64,
+        # membership-event rounds replay on the embedded scalar oracle; the
+        # dense planes re-snapshot at each boundary (docs/ENGINE.md
+        # "Churn re-snapshot")
+        self._replay = sorted(
+            {int(r) for r in (cfg.churn or {}) if 0 <= int(r) < cfg.rounds}
         )
-        self._ver = np.zeros(self.K_inst, np.int64)
-        # delta ring: in-flight delta windows, one entry per delay age.
-        # f32 (and the int8 CPU path) carry the (A, N) plane — for int8 the
-        # rows hold the DEQUANTIZED wire values with the owner's own slices
-        # kept raw; the int8 kernel path instead rings the int8 codes + the
-        # per-block scale planes and dequantizes inside the fused kernel.
-        if self._int8 and self._use_kernel:
-            nb = S // WBLOCK
-            self._ring = (
-                jnp.zeros((self._Lu, A, K, S), jnp.int8),
-                jnp.zeros((self._Lu, A, K, nb), jnp.float32),
-            )
-        else:
-            self._ring = jnp.zeros((self._Lu, A, self.N), jnp.float32)
-        # error-feedback residuals, one per (sender, partition) wire slice
-        # (zero and untouched at owner positions: own deltas never transit)
-        self._E = jnp.zeros((A, K, S) if self._int8 else (1,), jnp.float32)
-        self._Vagg_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
-        self._Vstart_hist = jnp.zeros((self._HD, self.K_inst, S), jnp.float32)
+        self._replay_set = frozenset(self._replay)
+        # delivered-fate pubsub messages harvested at a boundary whose
+        # recipient is offline: they drop at their delivery tick (round key)
+        self._pending_drop_msgs: Dict[int, list] = {}
+        # harvested in-flight replica values pending a version-filtered
+        # merge, keyed by their merge round
+        self._mail_merges: Dict[int, list] = {}
+        # the constructor's membership broadcasts are still in flight; the
+        # scalar ticks would deliver them during round 0, so deliver them
+        # inert now — otherwise a later oracle replay would re-deliver them
+        # mid-run (and drop any addressed to a then-offline agent)
+        ps = seed_sim.net.pubsub
+        for _i, msg in sorted(
+            enumerate(ps._inflight), key=lambda e: (e[1].deliver_round, e[0])
+        ):
+            ps._inbox[msg.recipient].append(msg)
+            ps.bytes_recv[msg.recipient] += msg.nbytes
+        ps._inflight = []
+        self._snapshot_from_scalar(0, harvest=False)
 
-        # in-flight event queues: bounded-depth rings indexed by
-        # (consuming round) mod depth. Nothing stays in flight longer than
-        # Lu rounds (delays are capped), so depth Lu+1 suffices; every slot
-        # is drained exactly once per depth rounds. The window runner stacks
-        # each round's drained events into dense per-round tensors that ride
-        # the lax.scan as xs (the device state itself lives in the carry).
-        self._qdepth = self._Lu + 1
-        self._serve_ring: List[list] = [[] for _ in range(self._qdepth)]
-        self._arr_ring: List[list] = [[] for _ in range(self._qdepth)]
-        self._cache_ring: List[list] = [[] for _ in range(self._qdepth)]
-        self._merge_ring: List[list] = [[] for _ in range(self._qdepth)]
-        self._seq = 0
-        self._t = 0
+    def _snapshot_from_scalar(self, r0: int, harvest: bool) -> None:
+        """Rebuild every membership-dependent dense structure from the
+        scalar state — rows, instance tables, `_slot_inst`/`_widx`, the
+        value/eps/version/cache/residual planes, closed-form traffic masks,
+        replica pair tables, trainer buckets — and re-jit the span's device
+        programs. Runs once at construction (harvest=False: the init-phase
+        membership broadcasts were already delivered inert) and again after
+        each replayed membership-event round
+        (harvest=True: in-flight protocol messages are harvested into the
+        delta ring / queue rings / a span-constant mail plane, so the fused
+        span consumes them exactly where the scalar engine would)."""
+        sim = self._seed
+        ps = sim.net.pubsub
+        cfg = self.cfg
+        K, S = self.K, self.S
+        sizes = self._sizes
+
+        # ---- membership rows: live agents in scalar `active` (dict) order
+        self._ids = [a for a, ag in sim.agents.items() if ag.live]
+        A = len(self._ids)
+        self.A = A
+        self._row_of = {a: r for r, a in enumerate(self._ids)}
+        self._ids_arr = np.asarray(self._ids, np.int64)
+        self._ids_col = self._ids_arr[:, None]
+        act = np.asarray([not ps.is_offline(a) for a in self._ids], bool)
+        self._act = act
+        self._act_idx = np.nonzero(act)[0].astype(np.int32)
+        self._n_act = int(act.sum())
+        self._full_active = bool(act.all())
+
+        # ---- instance plane: one row per (partition, replica-slot) --------
+        holders: List[List[int]] = [self.table.holders_of(k) for k in range(K)]
+        inst_k: List[int] = []
+        inst_owner_id: List[int] = []
+        inst_id: Dict[Tuple[int, int], int] = {}
+        for k in range(K):
+            for j, h in enumerate(holders[k]):
+                inst_id[(k, j)] = len(inst_k)
+                inst_k.append(k)
+                inst_owner_id.append(h)
+        self.K_inst = len(inst_k)
+        K_inst = self.K_inst
+        self._inst_k = np.asarray(inst_k, np.int32)
+        self._inst_owner_id = np.asarray(inst_owner_id, np.int64)
+        # owner ROWS (scalar active-iteration order), the sort keys of every
+        # ordered drain — after churn, dict order need not be id order
+        self._inst_owner = np.asarray(
+            [self._row_of[h] for h in inst_owner_id], np.int32
+        )
+        rho = np.asarray([len(h) for h in holders], np.int64)
+        self._rho = rho
+        max_rho = int(rho.max()) if len(rho) and int(rho.max()) > 0 else 1
+        self._slot_inst = np.full((K, max_rho), -1, np.int32)
+        for (k, j), i in inst_id.items():
+            self._slot_inst[k, j] = i
+        owner_col = np.zeros((A, K), bool)
+        for i in range(K_inst):
+            owner_col[self._inst_owner[i], self._inst_k[i]] = True
+        self._owner_col = owner_col
+
+        # sequential-reduction capacities for the ordered gather paths:
+        # each other replica of a partition has at most one value in flight
+        # per send round (ages 0..Lu), and each non-owner at most one
+        # UpdateModel delta per in-flight send round
+        self._mw = max(1, (max_rho - 1) * self._HD)
+        self._cw = 1 + self._HD * (A - 1)
         # kernel-path contributor cap: owner + every other agent once per
         # delta-age window. The quantized kernel takes the owner's raw delta
         # through a dedicated input, so its contributor table holds only the
@@ -756,7 +783,558 @@ class VectorizedIPLSSimulation:
             self.R_cap = max(1, (A - 1) * (self._Lu + 1))
         else:
             self.R_cap = 1 + (A - 1) * (self._Lu + 1)
+
+        # per-round send counts/bytes are closed-form over ACTIVE senders:
+        # loss only affects delivery, never whether a message is sent, and
+        # offline agents send nothing (the scalar round skips them)
+        send_mask = act[:, None] & ~owner_col & (rho > 0)[None, :]
+        self._upd_send_mask = send_mask
+        self._upd_msgs = int(send_mask.sum())
+        self._upd_bytes = int((send_mask * self._wsizes[None, :]).sum())
+        # ordered (source -> destination) instance pairs for replica sync.
+        # Sources are instances whose owner is ACTIVE (offline holders skip
+        # sync_replicas); destinations include offline holders — the pubsub
+        # fans a publish out to every subscriber, drawing a fate each, and
+        # a delivered fate to an offline holder is an offline drop at the
+        # send round.
+        src, dst = [], []
+        for k in range(K):
+            insts = np.nonzero(self._inst_k == k)[0]
+            if len(insts) <= 1:
+                continue
+            for i in insts:
+                if not act[self._inst_owner[i]]:
+                    continue
+                for j in insts:
+                    if i != j:
+                        src.append(int(i))
+                        dst.append(int(j))
+        self._rep_src = np.asarray(src, np.int32)
+        self._rep_dst = np.asarray(dst, np.int32)
+        self._rep_src_agent = self._inst_owner_id[self._rep_src]
+        self._rep_dst_agent = self._inst_owner_id[self._rep_dst]
+        self._rep_k = self._inst_k[self._rep_src]
+        self._rep_dst_act = (
+            act[self._inst_owner[self._rep_dst]]
+            if len(dst)
+            else np.zeros(0, bool)
+        )
+        pub_inst = sorted({int(i) for i in src})
+        self._pub_msgs = len(pub_inst)
+        self._pub_bytes = (
+            int(np.sum(self._wsizes[self._inst_k[pub_inst]])) if pub_inst else 0
+        )
+
+        # W-assembly index into concat([V (K_inst rows), C (A*K rows)]):
+        # owners read their own instance value, everyone else their cache row
+        widx = np.zeros((A, K), np.int32)
+        inst_of = {
+            (int(self._inst_owner[i]), int(self._inst_k[i])): i
+            for i in range(K_inst)
+        }
+        for r in range(A):
+            for k in range(K):
+                widx[r, k] = inst_of.get((r, k), K_inst + r * K + k)
+        self._widx = widx
+
+        # ---- value / eps / version / cache / residual planes --------------
+        V = np.zeros((K_inst, S), np.float32)
+        # eps lives on the HOST in float64: the scalar engine's per-partition
+        # eps is a python float, and its recursion must be replayed in the
+        # same precision (f32 replay drifts by an ULP, which the int8 codec
+        # amplifies to a full quantization step).
+        eps64 = np.ones(K_inst, np.float64)
+        ver = np.zeros(K_inst, np.int64)
+        for i in range(K_inst):
+            st = sim.agents[int(self._inst_owner_id[i])].owned[int(self._inst_k[i])]
+            V[i, : sizes[self._inst_k[i]]] = st.value
+            eps64[i] = st.eps
+            ver[i] = st.version
+        self._Vl = jnp.asarray(V)
+        self._eps64 = eps64
+        self._ver = ver
+        # explicit cache plane + fetch warm-up state. A slot stays at its
+        # last successfully delivered value — exactly the scalar
+        # cache-staleness semantics under loss.
+        C = np.zeros((A, K, S), np.float32)
+        has = np.zeros((A, K), bool)
+        for r, a in enumerate(self._ids):
+            for k, val in sim.agents[a].cache.items():
+                C[r, k, : sizes[k]] = val
+                has[r, k] = True
+        self._has_cache = has
+        self._C = jnp.asarray(C)
+        # error-feedback residuals, one per (sender, partition) wire slice.
+        # Owner positions carry the agent's (frozen, never again read)
+        # residual from any pre-ownership sends — matching the scalar
+        # _delta_err dict, which keeps stale entries across handoffs.
+        if self._int8:
+            E = np.zeros((A, K, S), np.float32)
+            for r, a in enumerate(self._ids):
+                for k, err in sim.agents[a]._delta_err.items():
+                    if err is not None:
+                        E[r, k, : len(err)] = err
+        # delta ring: in-flight delta windows, one entry per delay age.
+        # f32 (and the int8 CPU path) carry the (A, N) plane — for int8 the
+        # rows hold the DEQUANTIZED wire values with the owner's own slices
+        # kept raw; the int8 kernel path instead rings the int8 codes + the
+        # per-block scale planes and dequantizes inside the fused kernel.
+        if self._int8 and self._use_kernel:
+            nb = S // WBLOCK
+            ring_np = (
+                np.zeros((self._Lu, A, K, S), np.int8),
+                np.zeros((self._Lu, A, K, nb), np.float32),
+            )
+        else:
+            ring_np = np.zeros((self._Lu, A, self.N), np.float32)
+        self._serve_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._arr_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._cache_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._merge_ring: List[list] = [[] for _ in range(self._qdepth)]
+        self._seq = 0
+        self._t = r0
+        self._mail_merges = {}
+        self._pending_drop_msgs = {}
+        mail_vals: List[np.ndarray] = []
+        if harvest:
+            # may raise _HarvestDeferred; pubsub mutations are deferred to
+            # the commit step inside, so a raise leaves the pubsub intact
+            self._harvest_pubsub(r0, inst_of, ring_np, mail_vals)
+        if self._int8 and self._use_kernel:
+            self._ring = (jnp.asarray(ring_np[0]), jnp.asarray(ring_np[1]))
+        else:
+            self._ring = jnp.asarray(ring_np)
+        if self._int8:
+            self._E = jnp.asarray(E)
+        else:
+            self._E = jnp.zeros((1,), jnp.float32)
+        self._Vagg_hist = jnp.zeros((self._HD, K_inst, S), jnp.float32)
+        self._Vstart_hist = jnp.zeros((self._HD, K_inst, S), jnp.float32)
+        # span-constant mail plane: wire images of harvested in-flight
+        # reply/replica payloads, referenced by _KIND_MAIL cache events and
+        # mail merge entries (the value histories the span rings start empty,
+        # so pre-span values must travel alongside)
+        self._V_mail = (
+            np.stack(mail_vals).astype(np.float32) if mail_vals else None
+        )
+
+        # ---- trainers / batch buckets / eval rows -------------------------
+        # the scalar constructor's (and _apply_churn's) LocalTrainer objects
+        # own the per-agent RNG streams; drawing batches through their
+        # draw_batch() keeps both engines' SGD inputs identical. Only ACTIVE
+        # agents train — offline agents' streams freeze, like the scalar
+        # round skipping them.
+        self._trainers = [sim.trainers[a] for a in self._ids]
+        self._act_trainers = [
+            tr for tr, on in zip(self._trainers, act) if on
+        ]
+        bs = [min(cfg.batch_size, len(tr.x)) for tr in self._act_trainers]
+        self._buckets = []
+        start = 0
+        n_act = len(bs)
+        for i in range(1, n_act + 1):
+            if i == n_act or bs[i] != bs[start]:
+                self._buckets.append((start, i, bs[start]))
+                start = i
+        from repro.fl.rounds import eval_subset
+
+        self._eval_idx = np.asarray(
+            [self._row_of[a] for a in eval_subset(list(self._ids), cfg.eval_agents)],
+            np.int32,
+        )
+
+        # ---- counters / telemetry handoff --------------------------------
+        self.messages_sent = ps.messages_sent
+        self.messages_dropped = ps.messages_dropped
+        self._bytes_total = ps.total_bytes()
+        ps.telemetry = None
+        if harvest and (self.recorder is not None or self._eval_cadence > 1):
+            # scan-gated rounds reuse the last computed accuracies; refresh
+            # from the replayed round's evaluation so the reuse crosses the
+            # boundary intact
+            if self.recorder is not None and self.recorder.rows:
+                self._last_accs = np.asarray(
+                    self.recorder.rows[-1]["accs"], np.float32
+                )
+            else:
+                self._last_accs = np.asarray(sim._eval_accs(), np.float32)
         self._build_jitted_lossy()
+
+    def _harvest_pubsub(self, r0, inst_of, ring_np, mail_vals) -> None:
+        """Convert the scalar pubsub's delivered-but-undrained inbox
+        messages and its in-flight queue into span state: UpdateModel
+        payloads into the delta ring + arrival entries, fetches into serve
+        entries, reply/replica values into the mail plane, membership
+        broadcasts delivered inert, and delivered-fate messages to offline
+        recipients into pending tick-of-delivery drops.
+
+        Classification is read-only; pubsub mutations commit at the end, so
+        an unsupported straggler (`_HarvestDeferred`, only reachable when
+        max_delay_rounds > TICKS_PER_ROUND) leaves the pubsub untouched for
+        the scalar retry round. Within one drain slot, harvested inbox
+        entries precede in-flight entries in delivery order — exactly the
+        inbox fill order for max_delay_rounds <= TICKS_PER_ROUND; beyond
+        that, stragglers from different source rounds may interleave with
+        in-span arrivals in send order rather than delivery order."""
+        from repro.core.api import (
+            FETCH_TOPIC,
+            REPLY_TOPIC,
+            REPLICA_TOPIC,
+            UPDATE_TOPIC,
+        )
+
+        sim = self._seed
+        ps = sim.net.pubsub
+        TICKS = self._ticks
+        wire = sim.wire
+        sizes, offsets = self._sizes, self._offsets
+        row_of = self._row_of
+        act = self._act
+        Lu = self._Lu
+
+        arr_items: list = []    # (deliver_tick, order, drain_round, entry)
+        serve_items: list = []
+        new_inboxes: Dict[int, list] = {}
+        deliveries: list = []   # messages delivered whole (dead/member)
+        order = 0
+
+        def active_row(aid):
+            r = row_of.get(aid)
+            return r if (r is not None and act[r]) else None
+
+        def pad_val(wp):
+            val = np.zeros(self.S, np.float32)
+            dec = wire.decode(wp)
+            val[: len(dec)] = dec
+            return val
+
+        def ring_write(age, a_row, k, wp):
+            if not (0 <= age < Lu):
+                raise _HarvestDeferred
+            if self._int8 and self._use_kernel:
+                q, sc = wp
+                ring_np[0][age, a_row, k, : len(q)] = q
+                ring_np[1][age, a_row, k, : len(sc)] = sc
+            else:
+                ring_np[age, a_row, offsets[k] : offsets[k] + sizes[k]] = (
+                    wire.decode(wp)
+                )
+
+        def take_update(msg, order, u):
+            h_row = row_of[msg.recipient]
+            k, wp = msg.payload
+            i = inst_of.get((h_row, int(k)))
+            if i is None:
+                return  # recipient no longer owns k: scalar collect drops it
+            a_row = active_row(msg.sender)
+            if a_row is None:
+                raise _HarvestDeferred  # sender left/offline mid-flight
+            send_r = msg.sent_round // TICKS
+            ring_write(r0 - send_r - 1, a_row, int(k), wp)
+            arr_items.append(
+                (msg.deliver_round, order, u, (send_r, a_row, int(k), int(i)))
+            )
+
+        def take_fetch(msg, order, u):
+            a_row = active_row(msg.sender)
+            if a_row is None:
+                raise _HarvestDeferred  # requester left/offline mid-flight
+            (k,) = msg.payload
+            i = inst_of.get((row_of[msg.recipient], int(k)))
+            if i is None:
+                return  # holder lost k: scalar serve_reply returns silently
+            send_r = msg.sent_round // TICKS
+            serve_items.append(
+                (msg.deliver_round, order, u, (send_r, a_row, int(k), int(i)))
+            )
+
+        def take_reply(msg):
+            a_row = row_of[msg.recipient]
+            h_row = row_of.get(msg.sender)
+            if h_row is None:
+                raise _HarvestDeferred  # serving holder left mid-flight
+            k, wp = msg.payload
+            m = len(mail_vals)
+            mail_vals.append(pad_val(wp))
+            dv = max(msg.deliver_round, TICKS * r0)
+            self._cache_ring[(dv // TICKS) % self._qdepth].append(
+                (dv, msg.sent_round, h_row, self._seq, a_row, int(k),
+                 _KIND_MAIL, r0, m)
+            )
+            self._seq += 1
+
+        def take_replica(msg):
+            d_row = row_of[msg.recipient]
+            s_row = row_of.get(msg.sender)
+            if s_row is None:
+                raise _HarvestDeferred  # publishing holder left mid-flight
+            k, wp, ver = msg.payload
+            di = inst_of.get((d_row, int(k)))
+            if di is None:
+                return  # no longer an owner: scalar merge filter drops it
+            m = len(mail_vals)
+            mail_vals.append(pad_val(wp))
+            dv = max(msg.deliver_round, TICKS * r0)
+            self._mail_merges.setdefault(dv // TICKS, []).append(
+                (dv - 1, s_row, int(ver), int(di), m, msg.sent_round)
+            )
+
+        def lat(d):
+            return -(-d // TICKS)
+
+        # -- delivered-but-undrained inboxes of ACTIVE agents. Offline
+        # agents' inboxes stay in the pubsub untouched — the scalar engine
+        # would not drain them either until they come back online, which is
+        # itself a membership event that replays through the oracle.
+        for r, aid in enumerate(self._ids):
+            if not act[r]:
+                continue
+            keep = []
+            for msg in ps._inbox.get(aid, []):
+                order += 1
+                if msg.topic == UPDATE_TOPIC:
+                    take_update(msg, order, r0)
+                elif msg.topic == FETCH_TOPIC:
+                    take_fetch(msg, order, r0)
+                elif msg.topic == REPLY_TOPIC:
+                    take_reply(msg)
+                elif msg.topic.startswith(REPLICA_TOPIC):
+                    take_replica(msg)
+                else:
+                    keep.append(msg)  # membership traffic: inert
+            new_inboxes[aid] = keep
+
+        # -- in-flight messages, in delivery order (ties broken by queue
+        # position — the order the scalar tick appends them to an inbox)
+        for _idx, msg in sorted(
+            enumerate(ps._inflight), key=lambda e: (e[1].deliver_round, e[0])
+        ):
+            order += 1
+            rrow = row_of.get(msg.recipient)
+            if rrow is None:
+                # dead recipient: deliver into its (never-drained) inbox
+                deliveries.append(msg)
+                continue
+            if not act[rrow]:
+                # delivered-fate message to an offline recipient: the scalar
+                # tick drops it at its delivery tick
+                self._pending_drop_msgs.setdefault(
+                    msg.deliver_round // TICKS, []
+                ).append(msg)
+                continue
+            send_r = msg.sent_round // TICKS
+            d = msg.deliver_round - msg.sent_round
+            if msg.topic == UPDATE_TOPIC:
+                take_update(msg, order, send_r + lat(d))
+            elif msg.topic == FETCH_TOPIC:
+                take_fetch(msg, order, send_r + lat(d))
+            elif msg.topic == REPLY_TOPIC:
+                take_reply(msg)
+            elif msg.topic.startswith(REPLICA_TOPIC):
+                take_replica(msg)
+            else:
+                deliveries.append(msg)  # membership traffic: deliver inert
+
+        # -- commit (no raises past this point) -----------------------------
+        for aid, keep in new_inboxes.items():
+            ps._inbox[aid] = keep
+        for msg in deliveries:
+            ps._inbox[msg.recipient].append(msg)
+            ps.bytes_recv[msg.recipient] += msg.nbytes
+        ps._inflight = []
+        for _dv, _o, u, entry in sorted(serve_items, key=lambda e: (e[0], e[1])):
+            self._serve_ring[u % self._qdepth].append(entry)
+        for _dv, _o, u, entry in sorted(arr_items, key=lambda e: (e[0], e[1])):
+            self._arr_ring[u % self._qdepth].append(entry)
+
+    def _has_active(self) -> bool:
+        sim = self._seed
+        ps = sim.net.pubsub
+        return any(
+            ag.live and not ps.is_offline(a) for a, ag in sim.agents.items()
+        )
+
+    def _scalar_to_device(self, r0: int) -> bool:
+        """Enter a fused span at round r0: snapshot + harvest from the
+        scalar state. Returns False (staying in scalar mode for this round)
+        when no agent is active or a straggler defers the harvest."""
+        if not self._has_active():
+            return False
+        try:
+            self._snapshot_from_scalar(r0, harvest=True)
+        except _HarvestDeferred:
+            return False
+        self._on_device = True
+        return True
+
+    def _device_to_scalar(self, rnd: int) -> None:
+        """Leave the fused span before replaying round `rnd` on the scalar
+        oracle: write the dense device state back into the scalar agents
+        (via the core/api snapshot hooks) and re-inject every pending queue
+        entry as a pubsub message, so the oracle resumes from exactly the
+        state the span produced."""
+        from repro.core.api import (
+            FETCH_TOPIC,
+            REPLY_TOPIC,
+            REPLICA_TOPIC,
+            UPDATE_TOPIC,
+        )
+        from repro.fl.rounds import CH_FETCH, CH_UPDATE
+        from repro.p2p.ipfs_sim import Message
+
+        sim = self._seed
+        ps = sim.net.pubsub
+        TICKS = self._ticks
+        wire = sim.wire
+        sizes, offsets, wsizes = self._sizes, self._offsets, self._wsizes
+        K, K_inst = self.K, self.K_inst
+        Vl = np.asarray(self._Vl)
+        Cpl = np.asarray(self._C)
+        Vagg = np.asarray(self._Vagg_hist)
+        Vstart = np.asarray(self._Vstart_hist)
+        int8_kernel = self._int8 and self._use_kernel
+        if int8_kernel:
+            ring_q = np.asarray(self._ring[0])
+            ring_s = np.asarray(self._ring[1])
+            ring_f = None
+        else:
+            ring_f = np.asarray(self._ring)
+        E = np.asarray(self._E) if self._int8 else None
+
+        # ---- protocol-state writeback ------------------------------------
+        for r, aid in enumerate(self._ids):
+            owned = {}
+            for k in range(K):
+                i = self._widx[r, k]
+                if i < K_inst:  # owner rows index into the instance table
+                    owned[k] = (Vl[i, : sizes[k]], self._eps64[i], self._ver[i])
+            cache = {
+                k: Cpl[r, k, : sizes[k]]
+                for k in range(K)
+                if self._has_cache[r, k]
+            }
+            derr = (
+                {k: E[r, k, : sizes[k]] for k in range(K)}
+                if E is not None
+                else None
+            )
+            sim.agents[aid].import_state(owned, cache, derr)
+
+        # ---- pubsub clock / counters / telemetry -------------------------
+        ps.round = TICKS * rnd
+        ps.messages_sent = self.messages_sent
+        ps.messages_dropped = self.messages_dropped
+        delta_b = self._bytes_total - ps.total_bytes()
+        if delta_b:
+            # per-round engine traffic is tracked in aggregate; only the
+            # total is observable (total_bytes sums the per-sender dict)
+            ps.bytes_sent[self._ids[0]] += delta_b
+        ps.telemetry = self.recorder
+
+        # ---- re-inject pending queue entries as pubsub messages ----------
+        # sort key = (send tick, phase rank, scalar within-tick order): the
+        # _inflight list must hold messages in send order so the tick scan
+        # delivers same-tick arrivals exactly like the scalar rounds did
+        f = self._fates
+        out = []
+        for s in range(self._qdepth):
+            for send_r, a, k, inst in self._serve_ring[s]:
+                aid_req = int(self._ids_arr[a])
+                _de, d = f.draw_one(CH_FETCH, send_r, aid_req, k)
+                st = TICKS * send_r
+                out.append(
+                    ((st, 0, int(a), int(k)), st + int(d),
+                     Message(FETCH_TOPIC, aid_req, (int(k),), st, st + int(d),
+                             16, int(self._inst_owner_id[inst])))
+                )
+            for send_r, a, k, inst in self._arr_ring[s]:
+                aid_snd = int(self._ids_arr[a])
+                _de, d = f.draw_one(CH_UPDATE, send_r, aid_snd, k)
+                st = TICKS * send_r + 2
+                age = rnd - send_r - 1
+                if int8_kernel:
+                    # codes/scales ride the ring verbatim — re-injection is
+                    # bitwise, no decode/re-encode round trip
+                    nb = -(-int(sizes[k]) // WBLOCK)
+                    payload = (
+                        ring_q[age, a, k, : sizes[k]].copy(),
+                        ring_s[age, a, k, :nb].copy(),
+                    )
+                else:
+                    img = ring_f[age, a, offsets[k] : offsets[k] + sizes[k]]
+                    payload = wire.encode_value(img)[0]
+                out.append(
+                    ((st, 1, int(a), int(k)), st + int(d),
+                     Message(UPDATE_TOPIC, aid_snd, (int(k), payload), st,
+                             st + int(d), int(wsizes[k]),
+                             int(self._inst_owner_id[inst])))
+                )
+            for ctr, sc, holder, seq, a, k, kind, src_r, inst in self._cache_ring[s]:
+                if kind == _KIND_MAIL:
+                    img = self._V_mail[inst, : sizes[k]]
+                elif kind == _KIND_START:
+                    img = Vstart[rnd - 1 - src_r, inst, : sizes[k]]
+                else:
+                    img = Vagg[rnd - 1 - src_r, inst, : sizes[k]]
+                out.append(
+                    ((sc, 2, int(holder), seq), ctr,
+                     Message(REPLY_TOPIC, int(self._ids_arr[holder]),
+                             (int(k), wire.encode_value(img)[0]), sc, ctr,
+                             int(wsizes[k]), int(self._ids_arr[a])))
+                )
+            for send_r, si, di, ver_sent, dl in self._merge_ring[s]:
+                k = int(self._inst_k[si])
+                img = Vagg[rnd - 1 - send_r, si, : sizes[k]]
+                st = TICKS * send_r + 3
+                out.append(
+                    ((st, 3, int(self._inst_owner[si]), int(si)), st + int(dl),
+                     Message(f"{REPLICA_TOPIC}/{k}",
+                             int(self._inst_owner_id[si]),
+                             (k, wire.encode_value(img)[0], int(ver_sent)),
+                             st, st + int(dl), int(wsizes[k]),
+                             int(self._inst_owner_id[di])))
+                )
+        for _u, entries in sorted(self._mail_merges.items()):
+            for key_tick, src_row, ver_sent, di, m, sent_tick in entries:
+                k = int(self._inst_k[di])
+                img = self._V_mail[m, : sizes[k]]
+                out.append(
+                    ((sent_tick, 3, int(src_row), int(di)), key_tick + 1,
+                     Message(f"{REPLICA_TOPIC}/{k}",
+                             int(self._ids_arr[src_row]),
+                             (k, wire.encode_value(img)[0], int(ver_sent)),
+                             sent_tick, key_tick + 1, int(wsizes[k]),
+                             int(self._inst_owner_id[di])))
+                )
+        for _u in sorted(self._pending_drop_msgs):
+            for msg in self._pending_drop_msgs[_u]:
+                out.append(((msg.sent_round, 4, 0, 0), msg.deliver_round, msg))
+        out.sort(key=lambda e: e[0])
+        for _key, dv, msg in out:
+            if dv < TICKS * rnd:
+                # already due: the scalar tick would have delivered it
+                ps._inbox[msg.recipient].append(msg)
+                ps.bytes_recv[msg.recipient] += msg.nbytes
+            else:
+                ps._inflight.append(msg)
+        for ring in (self._serve_ring, self._arr_ring,
+                     self._cache_ring, self._merge_ring):
+            for slot in ring:
+                slot.clear()
+        self._mail_merges = {}
+        self._pending_drop_msgs = {}
+        self._on_device = False
+
+    def _live_ids(self) -> List[int]:
+        """Live agent ids in scalar iteration order — the row order of
+        `agent_weights()`. Reads the oracle directly while in scalar mode
+        (between an event replay and the next span)."""
+        if self._lossy and not self._on_device:
+            return [a for a, ag in self._seed.agents.items() if ag.live]
+        return list(self._ids)
+
+    def agent_ids(self) -> List[int]:
+        return self._live_ids()
 
     def _build_jitted_lossy(self):
         cfg, layout = self.cfg, self.layout
@@ -785,6 +1363,18 @@ class VectorizedIPLSSimulation:
         WNB = S // WBLOCK if int8 else 0
         widx = jnp.asarray(self._widx)
         widx_eval = jnp.asarray(self._widx[self._eval_idx])
+        # active-row structures: SGD runs over ONLINE rows only; python-level
+        # branches keep every jaxpr byte-identical to the fixed-membership
+        # programs when the whole membership is online
+        full_active = self._full_active
+        act_idx_j = jnp.asarray(self._act_idx)
+        widx_act = widx if full_active else jnp.asarray(self._widx[self._act_idx])
+        act3 = jnp.asarray(self._act)[:, None, None]
+        # span-constant mail plane (harvested in-flight reply/replica wire
+        # values); appended to each gather table only when non-empty so
+        # churn-free spans keep their exact jaxprs
+        MAIL = 0 if self._V_mail is None else int(self._V_mail.shape[0])
+        V_mail_j = jnp.asarray(self._V_mail) if MAIL else None
         inst_of_k = [np.nonzero(self._inst_k == k)[0] for k in range(K)]
         inst_row0 = [int(rows[0]) if len(rows) else 0 for rows in inst_of_k]
         off_inst = jnp.asarray(self._offsets[self._inst_k], jnp.int32)
@@ -808,12 +1398,15 @@ class VectorizedIPLSSimulation:
             its quantize->dequantize image."""
             V0 = qdq_rows(V) if int8 else V
             Vstart_new = jnp.concatenate([V0[None], Vstart_hist[:-1]], axis=0)
-            T0 = jnp.concatenate(
-                [Vstart_new.reshape(HD * K_inst, S), Vagg_hist.reshape(HD * K_inst, S)],
-                axis=0,
-            )
+            parts0 = [
+                Vstart_new.reshape(HD * K_inst, S),
+                Vagg_hist.reshape(HD * K_inst, S),
+            ]
+            if MAIL:
+                parts0.append(V_mail_j)
+            T0 = jnp.concatenate(parts0, axis=0)
             C0 = jnp.where(c0_mask[:, :, None], T0[c0_src], C)
-            W = build_W(V, C0, widx)
+            W = build_W(V, C0, widx_act)
             return Vstart_new, C0, W
 
         def core_main(V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
@@ -838,7 +1431,10 @@ class VectorizedIPLSSimulation:
             if int8:
                 Dplane = D_now[:, col_ks] * valid_ksf[None]  # (A, K, S)
                 qn, scn, ne = quantize_rows(Dplane, E)
-                E_new = jnp.where(owner3, E, ne)
+                # offline agents never send, so their error-feedback
+                # residuals must freeze exactly like the scalar dict entries
+                keep3 = owner3 if full_active else (owner3 | ~act3)
+                E_new = jnp.where(keep3, E, ne)
             else:
                 E_new = E
             if int8 and use_kernel:
@@ -932,19 +1528,21 @@ class VectorizedIPLSSimulation:
             Vm_flat = jnp.concatenate(
                 [V_aggw[None], Vagg_hist[: HD - 1]], axis=0
             ).reshape(HD * K_inst, S)
+            if MAIL:
+                Vm_flat = jnp.concatenate([Vm_flat, V_mail_j], axis=0)
             acc = V_agg
             for j in range(MW):
                 acc = jnp.where(mmask[:, j, None] > 0, acc + Vm_flat[msrc[:, j]], acc)
             V_new = acc / (1.0 + merge_cnt)[:, None]
             # phase-2 cache updates (may reference this round's post-agg table)
-            T2 = jnp.concatenate(
-                [
-                    Vstart_new.reshape(HD * K_inst, S),
-                    Vagg_hist.reshape(HD * K_inst, S),
-                    V_aggw,
-                ],
-                axis=0,
-            )
+            parts2 = [
+                Vstart_new.reshape(HD * K_inst, S),
+                Vagg_hist.reshape(HD * K_inst, S),
+                V_aggw,
+            ]
+            if MAIL:
+                parts2.append(V_mail_j)
+            T2 = jnp.concatenate(parts2, axis=0)
             C2 = jnp.where(c2_mask[:, :, None], T2[c2_src], C0)
             Vagg_hist_new = jnp.concatenate([V_aggw[None], Vagg_hist[:-1]], axis=0)
             return V_new, C2, ring_new, Vagg_hist_new, E_new
@@ -964,16 +1562,25 @@ class VectorizedIPLSSimulation:
         # output (deltas RAW pre-quantize, values the authoritative plane)
         tel = self.recorder is not None
 
-        def core(V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
+        def expand_rows(D_act):
+            # scatter the online rows' deltas into the full (A, N) plane;
+            # offline rows stay zero (they neither send nor contribute)
+            if full_active:
+                return D_act
+            return jnp.zeros((A, N), jnp.float32).at[act_idx_j].set(D_act)
+
+        def core(V, C0, D_act, ring, Vagg_hist, Vstart_new, E,
                  msrc, eps, mmask, merge_cnt, c2_mask, c2_src, kidx, kmask):
             V_new, C2, ring_new, Vagg_hist_new, E_new = core_main(
-                V, C0, D_now, ring, Vagg_hist, Vstart_new, E,
+                V, C0, expand_rows(D_act), ring, Vagg_hist, Vstart_new, E,
                 msrc, eps, mmask, merge_cnt, c2_mask, c2_src, kidx, kmask,
             )
             accs = eval_lossy(V_new, C2)
             out = (V_new, C2, ring_new, Vagg_hist_new, E_new, accs)
             if tel:
-                out = out + (metric_pair(D_now, V_new),)
+                # delta metrics over the TRAINED rows only — the scalar
+                # emission stacks exactly the active agents' deltas
+                out = out + (metric_pair(D_act, V_new),)
             return out
 
         buckets = self._buckets
@@ -1002,9 +1609,9 @@ class VectorizedIPLSSimulation:
                  c2_mask, c2_src, kidx, kmask, de) = xs
                 Vstart_new, C0, W = pre(V, C, Vstart_hist, Vagg_hist, c0_mask, c0_src)
                 W2 = sgd_all(W, Xr, Yr)
-                D_now = W - W2
+                D_act = W - W2
                 V_new, C2, ring_new, Vagg_hist_new, E_new = core_main(
-                    V, C0, D_now, ring, Vagg_hist, Vstart_new, Eres,
+                    V, C0, expand_rows(D_act), ring, Vagg_hist, Vstart_new, Eres,
                     msrc, eps, mmask, cnt, c2_mask, c2_src, kidx, kmask,
                 )
                 if gate_eval:
@@ -1017,7 +1624,7 @@ class VectorizedIPLSSimulation:
                     accs = eval_lossy(V_new, C2)
                 carry_new = (V_new, C2, ring_new, Vagg_hist_new, Vstart_new, E_new)
                 if tel:
-                    return carry_new, (accs, metric_pair(D_now, V_new))
+                    return carry_new, (accs, metric_pair(D_act, V_new))
                 return carry_new, accs
 
             def scan_window(V, C, ring, Vagg_hist, Vstart_hist, Eres, xs_all):
@@ -1076,31 +1683,52 @@ class VectorizedIPLSSimulation:
         sizes = self._sizes
         owner = self._owner_col
         rho = self._rho
+        act = self._act
+        act_col = act[:, None]
         msgs = drops = nbytes = 0
-        a_col = np.arange(A)[:, None]
         k_row = np.arange(K)[None, :]
-        # routing: non-owner a targets replica slot (rnd + a) % rho_k
-        slot = (rnd + a_col) % rho[None, :]
+        # routing: non-owner a targets replica slot (rnd + id_a) % rho_k —
+        # keyed by the agent's ID (the scalar target rule), while every
+        # dense index below runs over membership ROWS
+        slot = (rnd + self._ids_col) % np.maximum(rho, 1)[None, :]
         tgt_inst = self._slot_inst[np.broadcast_to(k_row, (A, K)), slot]
+        # target liveness per (a, k): a delivered-fate message to an offline
+        # holder is an offline drop at the send tick (pubsub send semantics)
+        tgt_act = np.zeros((A, K), bool)
+        has_tgt = np.broadcast_to(rho[None, :] > 0, (A, K))
+        tgt_act[has_tgt] = act[self._inst_owner[tgt_inst[has_tgt]]]
 
         def lat_rounds(d):
             return -(-d // TICKS)
 
+        # ---- in-flight messages whose recipient went offline at the span
+        # boundary: the scalar tick drops them at their delivery tick
+        for msg in self._pending_drop_msgs.pop(t, []):
+            drops += 1
+            if rec is not None:
+                rec.on_offline_drop(msg.deliver_round)
+
         # ---- phase 0: fetch requests for partitions never yet cached ------
-        need = (~owner) & (~self._has_cache)
+        need = act_col & (~owner) & (~self._has_cache) & has_tgt
         n_need = int(need.sum())
         if n_need:
-            de, dl = wf.slice("fetch", t) if wf else f.draw(CH_FETCH, t, a_col, k_row)
+            de, dl = (
+                wf.slice("fetch", t)
+                if wf
+                else f.draw(CH_FETCH, t, self._ids_col, k_row)
+            )
+            lost = need & ~de
+            offl = need & de & ~tgt_act
+            live = need & de & tgt_act
             msgs += n_need
             nbytes += 16 * n_need
-            drops += int((need & ~de).sum())
+            drops += int(lost.sum()) + int(offl.sum())
             if rec is not None:
-                rec.on_channel(
-                    rnd, "fetch", n_need, 16 * n_need, int((need & ~de).sum())
-                )
-                rec.on_delays(rnd, dl[need & de])
+                rec.on_channel(rnd, "fetch", n_need, 16 * n_need, int(lost.sum()))
+                rec.on_offline_drops(rnd, int(offl.sum()))
+                rec.on_delays(rnd, dl[live])
             lat = lat_rounds(dl)
-            for a, k in np.argwhere(need & de):
+            for a, k in np.argwhere(live):
                 self._serve_ring[(t + int(lat[a, k])) % self._qdepth].append(
                     (t, int(a), int(k), int(tgt_inst[a, k]))
                 )
@@ -1112,7 +1740,10 @@ class VectorizedIPLSSimulation:
         sv_bytes = sv_drops = 0
         sv_delays: List[int] = []
         for send_r, a, k, inst in serves:
-            de1, d1 = f.draw_one(CH_FETCH_REPLY, t, a, k, int(self._inst_owner[inst]))
+            de1, d1 = f.draw_one(
+                CH_FETCH_REPLY, t, int(self._ids_arr[a]), k,
+                int(self._inst_owner_id[inst]),
+            )
             msgs += 1
             nbytes += int(self._wsizes[k])
             sv_bytes += int(self._wsizes[k])
@@ -1129,22 +1760,28 @@ class VectorizedIPLSSimulation:
             rec.on_delays(rnd, sv_delays)
 
         # ---- phase 2: UpdateModel sends -----------------------------------
-        de_u, dl_u = wf.slice("update", t) if wf else f.draw(CH_UPDATE, t, a_col, k_row)
-        nonown = ~owner
+        de_u, dl_u = (
+            wf.slice("update", t)
+            if wf
+            else f.draw(CH_UPDATE, t, self._ids_col, k_row)
+        )
+        send_u = self._upd_send_mask
         msgs += self._upd_msgs
         nbytes += self._upd_bytes
-        drops += int((nonown & ~de_u).sum())
+        lost_u = send_u & ~de_u
+        offl_u = send_u & de_u & ~tgt_act
+        drops += int(lost_u.sum()) + int(offl_u.sum())
         lat_u = lat_rounds(dl_u)
         # ring appends must mirror the scalar inbox, which fills in delivery-
         # TICK order: a message delayed d ticks lands at tick TICKS*t+2+d, so
         # same-send-round arrivals drain delay-ascending first, then publish
         # (a, k) order. np.unique gives the delays sorted ascending.
-        live_u = nonown & de_u
+        live_u = send_u & de_u & tgt_act
         if rec is not None:
             rec.on_channel(
-                rnd, "update", self._upd_msgs, self._upd_bytes,
-                int((nonown & ~de_u).sum()),
+                rnd, "update", self._upd_msgs, self._upd_bytes, int(lost_u.sum())
             )
+            rec.on_offline_drops(rnd, int(offl_u.sum()))
             rec.on_delays(rnd, dl_u[live_u])
         for d in np.unique(dl_u[live_u]):
             for a, k in np.argwhere(live_u & (dl_u == d)):
@@ -1157,7 +1794,11 @@ class VectorizedIPLSSimulation:
             self._arr_ring[t % self._qdepth], []
         )
         M_all = np.zeros((K_inst, (Lu + 1) * A), np.float32)
-        M_all[np.arange(K_inst), self._inst_owner] = 1.0  # owner self-delta
+        # owner self-delta — only when the owner is ONLINE (offline holders
+        # neither train nor aggregate, so their r stays 0 and eps freezes)
+        M_all[np.arange(K_inst), self._inst_owner] = act[self._inst_owner].astype(
+            np.float32
+        )
         # per-instance contributor columns in scalar DELIVERY order: the
         # arrivals list drains the ring in append order = (send round
         # ascending, then tick-delay ascending, then (a, k) send order),
@@ -1180,7 +1821,8 @@ class VectorizedIPLSSimulation:
         if arrivals:
             arr = np.asarray([(a, k, i) for (_, a, k, i) in arrivals], np.int64)
             de_r, d_r = f.draw(
-                CH_UPDATE_REPLY, t, arr[:, 0], arr[:, 1], self._inst_owner[arr[:, 2]]
+                CH_UPDATE_REPLY, t, self._ids_arr[arr[:, 0]], arr[:, 1],
+                self._inst_owner_id[arr[:, 2]],
             )
             msgs += len(arrivals)
             nbytes += int(np.sum(self._wsizes[arr[:, 1]]))
@@ -1212,15 +1854,19 @@ class VectorizedIPLSSimulation:
                     CH_REPLICA, t, self._rep_src_agent, self._rep_k, self._rep_dst_agent
                 )
             )
-            drops += int((~de_p).sum())
+            lost_p = ~de_p
+            offl_p = de_p & ~self._rep_dst_act
+            live_p = de_p & self._rep_dst_act
+            drops += int(lost_p.sum()) + int(offl_p.sum())
             if rec is not None:
                 rec.on_channel(
                     rnd, "replica", self._pub_msgs, self._pub_bytes,
-                    int((~de_p).sum()),
+                    int(lost_p.sum()),
                 )
-                rec.on_delays(rnd, dl_p[de_p])
+                rec.on_offline_drops(rnd, int(offl_p.sum()))
+                rec.on_delays(rnd, dl_p[live_p])
             lat_p = lat_rounds(dl_p)
-            for j in np.nonzero(de_p)[0]:
+            for j in np.nonzero(live_p)[0]:
                 si, di = int(self._rep_src[j]), int(self._rep_dst[j])
                 self._merge_ring[(t + int(lat_p[j])) % self._qdepth].append(
                     (t, si, di, int(ver_after[si]), int(dl_p[j]))
@@ -1238,13 +1884,28 @@ class VectorizedIPLSSimulation:
         merges, self._merge_ring[t % self._qdepth] = (
             self._merge_ring[t % self._qdepth], []
         )
-        merges.sort(
-            key=lambda e: (e[0] * TICKS + 2 + e[4], int(self._inst_owner[e[1]]))
-        )
-        for send_r, si, di, ver_sent, _d in merges:
+        # unified landing-order key over in-span and harvested (mail) merge
+        # entries: (landing tick - 1, send tick, source row). In-span
+        # entries publish at tick TICKS*send_r + 3 and land at +3 + dl;
+        # under max_delay <= TICKS the send-tick component is a no-op (all
+        # same-landing-tick entries share the send round), beyond that it
+        # keeps stragglers in scalar send order.
+        entries = [
+            (
+                e[0] * TICKS + 2 + e[4], e[0] * TICKS + 3,
+                int(self._inst_owner[e[1]]), int(e[2]), int(e[3]),
+                (t - e[0]) * K_inst + int(e[1]),
+            )
+            for e in merges
+        ] + [
+            (int(kt), int(st_), int(sr), int(di), int(vs), HD * K_inst + int(m))
+            for kt, sr, vs, di, m, st_ in self._mail_merges.pop(t, [])
+        ]
+        entries.sort(key=lambda e: (e[0], e[1], e[2]))
+        for _kt, _st, _sr, di, ver_sent, col_src in entries:
             if ver_sent >= ver_after[di]:
                 col = int(cnt[di])
-                msrc[di, col] = (t - send_r) * K_inst + si
+                msrc[di, col] = col_src
                 mmsk[di, col] = 1.0
                 cnt[di] += 1.0
         self._ver = ver_after
@@ -1258,13 +1919,24 @@ class VectorizedIPLSSimulation:
             self._cache_ring[t % self._qdepth], []
         )
         for ctr, _sc, _holder, _seq, a, k, kind, src_r, inst in sorted(cache_events):
-            if kind == _KIND_START:
+            is_c0 = ctr % TICKS <= 1
+            if kind == _KIND_MAIL:
+                # harvested reply payload: `inst` is a mail-plane row; the
+                # mail block sits after the value sections of each gather
+                # table (T0: 2 history rings; T2: rings + this round's
+                # post-agg table)
+                idx = (
+                    2 * HD * K_inst + inst
+                    if is_c0
+                    else (2 * HD + 1) * K_inst + inst
+                )
+            elif kind == _KIND_START:
                 idx = (t - src_r) * K_inst + inst
             elif src_r < t:
                 idx = HD * K_inst + (t - src_r - 1) * K_inst + inst
             else:
                 idx = 2 * HD * K_inst + inst
-            if ctr % TICKS <= 1:
+            if is_c0:
                 c0_mask[a, k] = True
                 c0_src[a, k] = idx
             else:
@@ -1290,7 +1962,10 @@ class VectorizedIPLSSimulation:
         kmask = np.zeros((K_inst, width), np.float32)
         for i in range(K_inst):
             rows = contrib_cols[i]
-            if add_owner:
+            # offline owners contribute nothing (their D row is zero anyway,
+            # but keeping the mask exact keeps the sequential-sum shape
+            # aligned with the scalar pending order)
+            if add_owner and act[self._inst_owner[i]]:
                 rows = [int(self._inst_owner[i])] + rows
             kidx[i, : len(rows)] = rows
             kmask[i, : len(rows)] = 1.0
@@ -1382,11 +2057,11 @@ class VectorizedIPLSSimulation:
         fixed), stack its dense per-round tensors as scan xs, and scan the
         fused pre+SGD+core body over them with the device state in the
         carry."""
-        A, K = self.A, self.K
+        K = self.K
         pt = self._pt
         with pt.phase("fate_draw"):
             wf = _FateWindow(
-                self._fates, self._t, W, np.arange(A)[:, None], np.arange(K)[None, :],
+                self._fates, self._t, W, self._ids_col, np.arange(K)[None, :],
                 self._rep_src_agent, self._rep_k, self._rep_dst_agent,
             )
         with pt.phase("control"):
@@ -1442,15 +2117,37 @@ class VectorizedIPLSSimulation:
 
     # -- one round ----------------------------------------------------------
     def _draw_batches(self):
+        # only the ONLINE agents' RNG streams advance — the scalar train
+        # phase skips offline agents, so their trainers must not draw
         xs, ys = [], []
-        for tr in self._trainers:
+        for tr in self._act_trainers:
             xb, yb = tr.draw_batch()
             xs.append(xb)
             ys.append(yb)
         return xs, ys
 
+    def _scalar_round(self, rnd: int) -> dict:
+        """One round on the embedded scalar oracle: membership-event rounds
+        (and the rare spans the dense planes cannot host, e.g. zero active
+        agents) replay there, then the next fused round re-snapshots."""
+        if self._on_device:
+            self._device_to_scalar(rnd)
+        met = self._seed.run_round(rnd)
+        # keep the mirrored counters live even if the run ends on the oracle
+        ps = self.net.pubsub
+        self.messages_sent = ps.messages_sent
+        self.messages_dropped = ps.messages_dropped
+        self._bytes_total = ps.total_bytes()
+        self._n_act = met["active"]
+        self.history.append(met)
+        return met
+
     def run_round(self, rnd: int) -> dict:
         if self._lossy:
+            if rnd in self._replay_set:
+                return self._scalar_round(rnd)
+            if not self._on_device and not self._scalar_to_device(rnd):
+                return self._scalar_round(rnd)
             return self._run_round_lossy(rnd)
         pt = self._pt
         with pt.phase("batches"):
@@ -1519,7 +2216,7 @@ class VectorizedIPLSSimulation:
         m = np.asarray(met, np.float32)
         self.recorder.finish_round(
             round=rnd,
-            active=self.A,
+            active=self._n_act,
             contrib=[int(x) for x in contrib],
             eps=[float(x) for x in eps],
             delta_normsq=float(m[0]),
@@ -1580,7 +2277,7 @@ class VectorizedIPLSSimulation:
             "acc_std": float(accs.std()),
             "acc_max": float(accs.max()),
             "round": rnd,
-            "active": self.A,
+            "active": self._n_act,
             "bytes_total": self._bytes_total,
         }
 
@@ -1654,20 +2351,40 @@ class VectorizedIPLSSimulation:
             raise ValueError("window must be >= 1")
         n0 = len(self.history)
         if self._lossy:
-            self._run_window_lossy(start_rnd, window)
+            # a window may not span a membership event: fall back to
+            # round-at-a-time (which replays event rounds on the oracle)
+            ok = not any(
+                (start_rnd + w) in self._replay_set for w in range(window)
+            )
+            if ok and not self._on_device:
+                ok = self._scalar_to_device(start_rnd)
+            if ok:
+                self._run_window_lossy(start_rnd, window)
+            else:
+                for w in range(window):
+                    self.run_round(start_rnd + w)
         else:
             self._run_window_perfect(start_rnd, window)
         return self.history[n0:]
 
     def run(self) -> List[dict]:
         W = self.scan_rounds
+        R = self.cfg.rounds
         if W:
             rnd = 0
-            while rnd < self.cfg.rounds:
-                self.run_window(rnd, min(W, self.cfg.rounds - rnd))
-                rnd += min(W, self.cfg.rounds - rnd)
+            while rnd < R:
+                if rnd in self._replay_set:
+                    # membership event: replay this round on the oracle,
+                    # then resume fused windows after the re-snapshot
+                    self.run_round(rnd)
+                    rnd += 1
+                    continue
+                nxt = next((r for r in self._replay if r > rnd), R)
+                step = min(W, nxt - rnd)
+                self.run_window(rnd, step)
+                rnd += step
         else:
-            for rnd in range(self.cfg.rounds):
+            for rnd in range(R):
                 self.run_round(rnd)
         return self.history
 
@@ -1677,6 +2394,13 @@ class VectorizedIPLSSimulation:
         each scalar agent's `load_model()` would return (reconstructed from
         the value tables and the last round's routing)."""
         if self._lossy:
+            if not self._on_device:
+                # state currently lives on the scalar oracle (mid-churn)
+                ids = self._live_ids()
+                W = np.zeros((len(ids), self.N), np.float32)
+                for r, a in enumerate(ids):
+                    W[r] = self._seed.agents[a].load_model()
+                return W
             tbl = np.concatenate(
                 [
                     np.asarray(self._Vl),

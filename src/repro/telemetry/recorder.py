@@ -125,6 +125,13 @@ class MetricsRecorder:
         self._traffic(counter // self._ticks)["drops_offline"] += 1
 
     # -- vectorized control-plane feeds (one call per channel batch) ---------
+    def on_offline_drops(self, rnd: int, count: int) -> None:
+        """Batch form of on_offline_drop keyed by round: the vectorized
+        control plane accounts a whole span's offline-recipient drops in one
+        call per round rather than per message."""
+        if count:
+            self._traffic(rnd)["drops_offline"] += int(count)
+
     def on_channel(
         self, rnd: int, channel: str, msgs: int, nbytes: int, drops: int
     ) -> None:

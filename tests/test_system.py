@@ -85,6 +85,58 @@ def test_joined_agent_contributes_deltas():
         assert len(versions) == 1, (k, versions)
 
 
+def test_joiner_aliasing_live_shard_gets_free_shard():
+    """Regression: the join fallback shard used to be
+    ``agent_id % len(shards)``, which can hand a joiner a shard an active
+    agent is already training on — double-counting that data in the
+    average. With a shard freed by a crash, the joiner must take the free
+    shard even when its id aliases a live agent's index."""
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=1500, num_test=300, seed=4)
+    shards = iid_split(x_tr, y_tr, 4, seed=4)
+    joiner = 4  # 4 % 4 == 0: aliases live agent 0's shard
+    cfg = SimConfig(
+        num_agents=4, num_partitions=6, pi=2, rho=2, rounds=5,
+        local_iters=2, churn={1: [(1, "crash")], 2: [(joiner, "join")]},
+    )
+    sim = IPLSSimulation(cfg, shards, x_te, y_te)
+    sim.run()
+    # the crash freed shard 1; the joiner got it, not agent 0's shard 0
+    assert sim._trainer_shard[joiner] == 1
+    np.testing.assert_array_equal(sim.trainers[joiner].x, shards[1][0])
+    # no live pair trains the same shard
+    live = [a for a, ag in sim.agents.items() if ag.live]
+    held = [sim._trainer_shard[a] for a in live if a in sim._trainer_shard]
+    assert len(held) == len(set(held))
+
+
+def test_same_round_churn_events_apply_in_class_order():
+    """Same-round events apply departures -> joins -> offline/online
+    regardless of their list order in cfg.churn (the SimConfig.churn
+    contract), so conflicting pairs like crash+join of one id are
+    deterministic: the join always wins and yields a fresh live agent."""
+    x_tr, y_tr, x_te, y_te = synth_mnist(num_train=1500, num_test=300, seed=5)
+    shards = iid_split(x_tr, y_tr, 4, seed=5)
+
+    def run(events):
+        cfg = SimConfig(
+            num_agents=4, num_partitions=6, pi=2, rho=2, rounds=4,
+            local_iters=2, churn={2: events},
+        )
+        sim = IPLSSimulation(cfg, shards, x_te, y_te)
+        hist = sim.run()
+        return sim, hist
+
+    sim_a, hist_a = run([(1, "crash"), (1, "join")])
+    sim_b, hist_b = run([(1, "join"), (1, "crash")])
+    for sim in (sim_a, sim_b):
+        assert sim.agents[1].live  # join applied after the crash
+    assert [m["active"] for m in hist_a] == [m["active"] for m in hist_b]
+    for a in sim_a.agents:
+        np.testing.assert_array_equal(
+            sim_a.agents[a].load_model(), sim_b.agents[a].load_model()
+        )
+
+
 def test_merge_replicas_discards_stale_versions():
     """A replica value published in an earlier round (delayed delivery)
     carries an older version and must not be mean-merged next to fresh

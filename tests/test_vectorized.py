@@ -128,9 +128,10 @@ def test_vectorized_rejects_out_of_scope_configs(data):
     lossy = SimConfig(num_agents=4, rounds=2, conditions=LOSSY, engine="vectorized")
     sim = make_simulation(lossy, shards, x_te, y_te)
     assert sim._lossy
+    # churn is IN scope since the event-boundary re-snapshot path
     churny = SimConfig(num_agents=4, rounds=2, churn={1: [(3, "offline")]}, engine="vectorized")
-    with pytest.raises(ValueError):
-        make_simulation(churny, shards, x_te, y_te)
+    sim = make_simulation(churny, shards, x_te, y_te)
+    assert sim._lossy and sim._replay == [1]
     with pytest.raises(ValueError):
         make_simulation(dataclasses.replace(lossy, engine="nope"), shards, x_te, y_te)
 
@@ -179,3 +180,76 @@ def test_batched_kernel_matches_batched_ref_unequal_sizes():
     np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
     for k, s in enumerate(sizes):
         assert np.all(got[k, s:] == 0.0)
+
+
+# ---- churn: event-boundary re-snapshot --------------------------------------
+CHURN_ALL_ACTIONS = {
+    1: [(2, "offline")],
+    3: [(4, "leave"), (2, "online")],
+    4: [(5, "join")],
+    6: [(1, "crash")],
+}
+
+
+@pytest.mark.parametrize("scan", [0, 3])
+@pytest.mark.parametrize("wire_dtype", ["f32", "int8"])
+def test_churn_matches_scalar_all_actions(data, scan, wire_dtype):
+    """All five membership actions on the vectorized engine (round-at-a-time
+    and lax.scan-windowed): event rounds replay on the embedded scalar
+    oracle, fused spans re-snapshot at each boundary, and the result matches
+    the scalar engine exactly — weights, traffic counters, and the telemetry
+    stream byte-for-byte."""
+    x_tr, y_tr, x_te, y_te = data
+    cfg = SimConfig(
+        num_agents=5, num_partitions=6, pi=2, rho=2, rounds=8,
+        local_iters=2, conditions=LOSSY, seed=0, churn=CHURN_ALL_ACTIONS,
+        telemetry=True, memory=True, wire_dtype=wire_dtype,
+    )
+    shards = iid_split(x_tr, y_tr, cfg.num_agents, seed=0)
+    sim_s = make_simulation(cfg, shards, x_te, y_te)
+    hist_s = sim_s.run()
+    sim_v = make_simulation(
+        dataclasses.replace(cfg, engine="vectorized", scan_rounds=scan),
+        shards, x_te, y_te,
+    )
+    hist_v = sim_v.run()
+    for ms, mv in zip(hist_s, hist_v):
+        assert ms["round"] == mv["round"] and ms["active"] == mv["active"]
+        assert ms["bytes_total"] == mv["bytes_total"]
+    ps = sim_s.net.pubsub
+    assert ps.messages_sent == sim_v.messages_sent
+    assert ps.messages_dropped == sim_v.messages_dropped
+    ids = [a for a, ag in sim_s.agents.items() if ag.live]
+    assert ids == sim_v.agent_ids()
+    w_s = np.stack([sim_s.agents[a].load_model() for a in ids])
+    np.testing.assert_allclose(w_s, sim_v.agent_weights(), atol=3e-8)
+    assert sim_s.recorder.jsonl_lines()[1:] == sim_v.recorder.jsonl_lines()[1:]
+    if scan:
+        # windows split only at the 4 event rounds: far fewer dispatches
+        # than one (or more) per round
+        assert sim_v.device_dispatches < cfg.rounds
+
+
+def test_churn_rho1_crash_reassignment_matches(data):
+    """rho=1 crash orphans partitions; the re-snapshot must pick up the
+    table's reassignment and the zero/cache-seeded holder states."""
+    x_tr, y_tr, x_te, y_te = data
+    cfg = SimConfig(
+        num_agents=4, num_partitions=8, pi=2, rho=1, rounds=6,
+        local_iters=2, conditions=LOSSY, seed=2, churn={2: [(1, "crash")]},
+    )
+    shards = iid_split(x_tr, y_tr, cfg.num_agents, seed=2)
+    sim_s = IPLSSimulation(cfg, shards, x_te, y_te)
+    hist_s = sim_s.run()
+    sim_v = make_simulation(
+        dataclasses.replace(cfg, engine="vectorized"), shards, x_te, y_te
+    )
+    hist_v = sim_v.run()
+    for ms, mv in zip(hist_s, hist_v):
+        assert ms["round"] == mv["round"] and ms["active"] == mv["active"]
+        assert ms["bytes_total"] == mv["bytes_total"]
+    assert sim_s.net.pubsub.messages_sent == sim_v.messages_sent
+    assert sim_s.net.pubsub.messages_dropped == sim_v.messages_dropped
+    ids = [a for a, ag in sim_s.agents.items() if ag.live]
+    w_s = np.stack([sim_s.agents[a].load_model() for a in ids])
+    np.testing.assert_allclose(w_s, sim_v.agent_weights(), atol=3e-8)
